@@ -1,0 +1,84 @@
+"""Render the dry-run/roofline markdown tables into EXPERIMENTS.md
+(between the DRYRUN_TABLE / ROOFLINE_TABLE markers).
+
+  PYTHONPATH=src python -m benchmarks.report_dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results", "dryrun", "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | args GiB/dev | temps GiB/dev | collectives MiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped: {r['reason'][:60]} | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAILED** | | | | |")
+            continue
+        ma = r["memory_analysis"]
+        coll = sum(r["collective_by_type"].values()) / 2**20
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']:.1f} "
+            f"| {ma['argument_size_in_bytes']/2**30:.2f} | {ma['temp_size_in_bytes']/2**30:.2f} | {coll:,.0f} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | bound s | useful | **mfu_bound** |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh'].split('_')[0]} "
+            f"| {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | {rf['collective_s']:.3f} "
+            f"| {rf['dominant']} | {rf['bound_s']:.3f} | {rf['useful_flops_ratio']:.2f} | {rf['mfu_bound']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def inject(marker: str, table: str, text: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.DOTALL)
+    return pat.sub(f"<!-- {marker} -->\n\n{table}\n", text)
+
+
+def main() -> None:
+    recs = _load()
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    text = inject("DRYRUN_TABLE", dryrun_table(recs), text)
+    text = inject("ROOFLINE_TABLE", roofline_table(recs), text)
+    with open(path, "w") as f:
+        f.write(text)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    fail = len(recs) - ok - sk
+    print(f"tables written: {ok} ok, {sk} skipped, {fail} failed")
+
+
+if __name__ == "__main__":
+    main()

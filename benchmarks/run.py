@@ -1,0 +1,282 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows (derived = the
+figure's headline quantity).
+
+  fig7a — mean wastage per method x training fraction (GiB*s)
+  fig7b — lowest-wastage counts per method
+  fig7c — mean retries per method
+  fig8  — wastage vs k for two contrasting task shapes
+  adaptive_k — per-task online k re-optimization vs fixed k=4 (paper Sec. V)
+  kernels — Pallas (interpret) vs jnp-oracle timing on corpus-scale batches
+  admission — serving HBM reservation wastage: segment-wise vs peak
+  cluster — scheduler-level dynamic reservations vs static policies
+  roofline — aggregated dry-run roofline table (reads results/dryrun/)
+
+Run all:    PYTHONPATH=src python -m benchmarks.run
+Run one:    PYTHONPATH=src python -m benchmarks.run fig7a
+Fast mode:  REPRO_BENCH_SCALE=0.15 PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.35"))
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+METHODS = ("default", "witt-lr", "ppm", "ppm-improved", "ksegments-selective", "ksegments-partial")
+FRACS = (0.25, 0.5, 0.75)
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+_SUITE_CACHE: dict = {}
+
+
+def _suite():
+    if "wfs" not in _SUITE_CACHE:
+        from repro.sim import generate_suite
+
+        _SUITE_CACHE["wfs"] = generate_suite(seed=SEED, scale=SCALE)
+    return _SUITE_CACHE["wfs"]
+
+
+def _grid_results():
+    if "res" not in _SUITE_CACHE:
+        from repro.sim import simulate_suite
+        from repro.sim.simulator import SimConfig
+
+        t0 = time.time()
+        res = simulate_suite(_suite(), METHODS, FRACS, SimConfig(min_executions=max(int(20 * SCALE), 8)))
+        _SUITE_CACHE["res"] = res
+        _SUITE_CACHE["res_time"] = time.time() - t0
+    return _SUITE_CACHE["res"], _SUITE_CACHE["res_time"]
+
+
+def bench_fig7a() -> None:
+    """Fig. 7a: average wastage (GiB*s) per method and training fraction."""
+    from repro.sim.simulator import fig7a_mean_wastage
+
+    res, t = _grid_results()
+    w = fig7a_mean_wastage(res)
+    n = len(res)
+    for frac in FRACS:
+        for m in METHODS:
+            _row(f"fig7a/{m}@{frac}", t * 1e6 / max(n, 1), f"wastage_gib_s={w[(m, frac)]:.1f}")
+    best_base = min(w[(m, 0.75)] for m in ("witt-lr", "ppm", "ppm-improved"))
+    red_sel = 100 * (1 - w[("ksegments-selective", 0.75)] / best_base)
+    red_par = 100 * (1 - w[("ksegments-partial", 0.75)] / best_base)
+    _row("fig7a/reduction_selective@0.75", t * 1e6 / max(n, 1), f"pct={red_sel:.2f} (paper 29.48)")
+    _row("fig7a/reduction_partial@0.75", t * 1e6 / max(n, 1), f"pct={red_par:.2f} (paper 22.39)")
+
+
+def bench_fig7b() -> None:
+    """Fig. 7b: number of tasks where each method ties the lowest wastage."""
+    from repro.sim.simulator import fig7b_lowest_counts
+
+    res, t = _grid_results()
+    c = fig7b_lowest_counts(res)
+    for frac in FRACS:
+        for m in METHODS:
+            _row(f"fig7b/{m}@{frac}", t * 1e6 / max(len(res), 1), f"lowest_count={c.get((m, frac), 0)}")
+
+
+def bench_fig7c() -> None:
+    """Fig. 7c: average retries per method and training fraction."""
+    from repro.sim.simulator import fig7c_mean_retries
+
+    res, t = _grid_results()
+    r = fig7c_mean_retries(res)
+    for frac in FRACS:
+        for m in METHODS:
+            _row(f"fig7c/{m}@{frac}", t * 1e6 / max(len(res), 1), f"retries={r[(m, frac)]:.4f}")
+
+
+def bench_fig8() -> None:
+    """Fig. 8: wastage as a function of k for two contrasting task shapes
+    (a zigzag/sawtooth task vs a smooth ramp/staged one), 50% training."""
+    from repro.sim.simulator import SimConfig, simulate_task
+    from repro.core.ksegments import KSegmentsConfig
+
+    wfs = _suite()
+    eligible = [t for wf in wfs for t in wf.eligible_tasks(max(int(20 * SCALE), 8))]
+    saw = next(t for t in eligible if t.family == "sawtooth")
+    smooth = next(t for t in eligible if t.family in ("ramp", "staged"))
+    for trace in (saw, smooth):
+        for k in range(1, 16):
+            cfg = SimConfig(ksegments=KSegmentsConfig(k=k))
+            t0 = time.time()
+            r = simulate_task(trace, "ksegments-selective", 0.5, cfg)
+            dt = time.time() - t0
+            _row(
+                f"fig8/{trace.family}/k={k}",
+                dt * 1e6 / max(r.n_test, 1),
+                f"wastage_gib_s={r.mean_wastage:.2f}",
+            )
+
+
+def bench_adaptive_k() -> None:
+    """Beyond-paper (the paper's Sec. V future work): per-task adaptive k via
+    online replay re-optimization, vs the paper's fixed k=4."""
+    from repro.core.allocation import run_with_retries_np
+    from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+    from repro.core.ktuner import AdaptiveKSelector
+
+    wfs = _suite()
+    tasks = [t for wf in wfs for t in wf.eligible_tasks(max(int(20 * SCALE), 8))][:8]
+    for name, factory in (
+        ("fixed_k4", lambda: KSegmentsModel(KSegmentsConfig(k=4))),
+        ("adaptive", lambda: AdaptiveKSelector(refresh=12)),
+    ):
+        t0 = time.time()
+        total, n = 0.0, 0
+        for trace in tasks:
+            m = factory()
+            execs = trace.executions
+            n_train = len(execs) // 2
+            for e in execs[:n_train]:
+                m.observe(e.input_size, e.series)
+            for e in execs[n_train:]:
+                alloc = m.predict(e.input_size)
+                w, _, _ = run_with_retries_np(e.series, trace.interval_s, alloc, "selective", 2.0, 128 * 1024)
+                total += w
+                n += 1
+                m.observe(e.input_size, e.series)
+        _row(f"adaptive_k/{name}", (time.time() - t0) * 1e6 / max(n, 1), f"wastage_gib_s={total:.1f}")
+
+
+def bench_kernels() -> None:
+    """Pallas kernels (interpret mode on CPU) vs jnp oracle on a corpus-sized
+    batch; derived = checksum agreement."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    B, T, k = 512, 2048, 4
+    y = jnp.asarray(rng.uniform(1, 1e4, (B, T)).astype(np.float32))
+    lengths = jnp.asarray(rng.integers(16, T + 1, B).astype(np.int32))
+    x = jnp.asarray(rng.uniform(-10, 10, B))
+    bounds = jnp.asarray(np.sort(rng.uniform(1, T * 2.0, (B, k)), axis=1).astype(np.float32))
+    values = jnp.asarray(np.maximum.accumulate(rng.uniform(10, 12000, (B, k)), axis=1).astype(np.float32))
+
+    for name, fn, args in (
+        ("segmax", ops.segment_peaks, (y, lengths, k)),
+        ("segmax_ref", ref.segment_peaks, (y, lengths, k)),
+        ("fitstats", lambda *a: ops.fit_stats(*a), (x, ops.segment_peaks(y, lengths, k), jnp.ones(B))),
+        ("fitstats_ref", lambda *a: ref.fit_stats(*a), (x, ops.segment_peaks(y, lengths, k), jnp.ones(B))),
+        ("wastage", lambda *a: ops.attempt_wastage(*a, 2.0), (y, lengths, bounds, values)),
+        ("wastage_ref", lambda *a: ref.attempt_wastage(*a, 2.0), (y, lengths, bounds, values)),
+    ):
+        out = jax.block_until_ready(fn(*args))  # compile + warm
+        t0 = time.time()
+        n = 3
+        for _ in range(n):
+            out = jax.block_until_ready(fn(*args))
+        dt = (time.time() - t0) / n
+        chk = float(np.sum(np.asarray(out[0] if isinstance(out, tuple) else out, dtype=np.float64)))
+        _row(f"kernels/{name}", dt * 1e6, f"checksum={chk:.6e}")
+
+
+def bench_admission() -> None:
+    """Beyond-paper: serving admission wastage, segment-wise vs peak."""
+    from repro.serve import AdmissionController
+
+    rng = np.random.default_rng(0)
+    ctl = AdmissionController(hbm_budget_mib=50_000.0, k=4, interval_s=1.0)
+
+    def series(plen):
+        steps = 60 + int(plen * 0.05)
+        return (plen * 0.8 + 0.8 * np.arange(steps)).astype(np.float32)
+
+    t0 = time.time()
+    for _ in range(60):
+        plen = int(rng.integers(100, 2000))
+        ctl.observe(plen, series(plen))
+    plans = []
+    for i in range(32):
+        plen = int(rng.integers(200, 1800))
+        plan = ctl.try_admit(f"r{i}", plen, 0.0)
+        if plan:
+            plans.append((plan, series(plen), 1.0))
+    w = ctl.reservation_wastage(plans)
+    dt = time.time() - t0
+    red = 100 * (1 - w["segmentwise_gib_s"] / max(w["peak_reservation_gib_s"], 1e-9))
+    _row("admission/segmentwise", dt * 1e6 / max(len(plans), 1), f"wastage_gib_s={w['segmentwise_gib_s']:.1f}")
+    _row("admission/peak_reservation", dt * 1e6 / max(len(plans), 1), f"wastage_gib_s={w['peak_reservation_gib_s']:.1f}")
+    _row("admission/reduction", dt * 1e6 / max(len(plans), 1), f"pct={red:.1f}")
+
+
+def bench_cluster() -> None:
+    """Beyond-paper: cluster-level scheduling with dynamic reservations
+    (the paper's Sec. IV-E 'resource managers must support adjustments')."""
+    from repro.sim.cluster import run_cluster
+
+    wfs = [w for w in _suite()]
+    t0 = time.time()
+    for policy in ("default", "ppm-improved", "ksegments-selective"):
+        r = run_cluster(wfs[:1], policy, n_nodes=4, max_tasks_per_type=int(30 * max(SCALE, 0.2)))
+        _row(
+            f"cluster/{policy}",
+            (time.time() - t0) * 1e6 / max(r.tasks_run, 1),
+            f"wastage_gib_s={r.wastage_gib_s:.1f} makespan_s={r.makespan_s:.0f} retries={r.retries}",
+        )
+
+
+def bench_roofline() -> None:
+    """Aggregate the dry-run artifacts into the roofline table."""
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(d):
+        _row("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(d, fname)) as f:
+            rec = json.load(f)
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            _row(f"roofline/{cell}", 0.0, "skipped")
+            continue
+        if rec["status"] != "ok":
+            _row(f"roofline/{cell}", 0.0, "FAILED")
+            continue
+        rf = rec["roofline"]
+        _row(
+            f"roofline/{cell}",
+            rec["compile_s"] * 1e6,
+            f"dominant={rf['dominant']} bound_s={rf['bound_s']:.3f} mfu_bound={rf['mfu_bound']:.3f} useful={rf['useful_flops_ratio']:.2f}",
+        )
+
+
+BENCHES = {
+    "fig7a": bench_fig7a,
+    "fig7b": bench_fig7b,
+    "fig7c": bench_fig7c,
+    "fig8": bench_fig8,
+    "adaptive_k": bench_adaptive_k,
+    "kernels": bench_kernels,
+    "admission": bench_admission,
+    "cluster": bench_cluster,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

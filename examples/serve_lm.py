@@ -1,0 +1,73 @@
+"""Serving driver: batched greedy decoding of a small LM with the paper's
+k-Segments predictor doing HBM admission control (beyond-paper application:
+a decode request's KV cache grows monotonically — exactly the memory shape
+Eq. 1 models).
+
+Phase 1 profiles finished requests to train the predictor online; phase 2
+admits a new wave segment-wise and reports the reservation-wastage saving
+over peak-at-admission.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import AdmissionController
+from repro.serve.admission import cache_bytes_per_token
+from repro.serve.engine import greedy_generate
+
+
+def main() -> None:
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # --- real batched decoding (the engine itself) ---
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+    out = greedy_generate(params, cfg, prompts, steps=12)
+    print(f"decoded batch: {out.shape} tokens, e.g. {np.asarray(out[0])[:8]}")
+
+    # --- admission control on a simulated HBM budget ---
+    # use the production mistral config's cache-growth rate: the reduced demo
+    # model's KV rows are too small for the budget to ever bind
+    big = get_config("mistral-large-123b")
+    bpt = cache_bytes_per_token(big) / 2**20  # MiB per decoded token (~0.43)
+    budget = 2048.0
+    ctl = AdmissionController(hbm_budget_mib=budget, k=4, interval_s=1.0)
+
+    def request_series(plen: int) -> np.ndarray:
+        steps = 40 + int(plen * 0.2) + int(rng.normal(0, 2))
+        return (plen * bpt + bpt * np.arange(max(steps, 4))).astype(np.float32)
+
+    for i in range(60):  # phase 1: profile finished requests
+        plen = int(rng.integers(32, 512))
+        ctl.observe(plen, request_series(plen))
+
+    admitted, rejected, plans = 0, 0, []
+    for i in range(64):  # phase 2: admission wave
+        plen = int(rng.integers(32, 512))
+        plan = ctl.try_admit(f"req-{i}", plen, now=0.0)
+        if plan is None:
+            rejected += 1
+        else:
+            admitted += 1
+            plans.append((plan, request_series(plen), 1.0))
+    w = ctl.reservation_wastage(plans)
+    static_fit = int(budget // float(np.mean([p.alloc.values[-1] for p, _, _ in plans])))
+    print(f"\nHBM budget {budget:.0f} MiB, {bpt:.4f} MiB/token cache growth (mistral-large rates)")
+    print(f"admitted {admitted}, rejected {rejected} (peak-reservation would fit ~{static_fit})")
+    print(f"reservation wastage: segment-wise {w['segmentwise_gib_s']:.2f} GiB*s "
+          f"vs peak {w['peak_reservation_gib_s']:.2f} GiB*s "
+          f"({100*(1-w['segmentwise_gib_s']/max(w['peak_reservation_gib_s'],1e-9)):.1f}% saved)")
+
+
+if __name__ == "__main__":
+    main()

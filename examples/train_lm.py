@@ -1,0 +1,100 @@
+"""End-to-end training driver: a small LM trained for a few hundred steps on
+CPU with the full production stack — deterministic data pipeline, AdamW,
+async checkpointing, fault injection + automatic restart, and the paper's
+k-Segments predictor monitoring the run's memory (host RSS) as a workflow
+task stream.
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~8M params, 120 steps
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --d-model 512   # ~100M-class
+  PYTHONPATH=src python examples/train_lm.py --fail-at 60    # watch it recover
+"""
+
+import argparse
+import dataclasses
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.distributed.fault_tolerance import run_with_recovery
+from repro.train import OptimizerConfig, TrainConfig, Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", help="family donor (reduced config)")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--fail-at", type=int, default=None, help="inject a node failure at this step")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+
+    if args.fresh:
+        shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    base = get_config(args.arch)
+    cfg = dataclasses.replace(
+        base.reduced(),
+        name=f"{base.name}-example",
+        d_model=args.d_model,
+        num_layers=args.layers,
+        num_heads=max(args.d_model // 64, 1),
+        num_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64,
+        d_ff=args.d_model * 4,
+        vocab_size=args.vocab,
+        remat=False,
+    )
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  ~{n_params/1e6:.1f}M params  "
+          f"({cfg.num_layers}L d={cfg.d_model} ff={cfg.d_ff} V={cfg.vocab_size})")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len, global_batch=args.batch, seed=0)
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    tc = TrainerConfig(
+        steps=args.steps,
+        checkpoint_every=max(args.steps // 4, 10),
+        checkpoint_dir=args.ckpt,
+        monitor_interval_s=0.25,
+        monitor_task_steps=20,
+        log_every=10,
+    )
+
+    fails = [args.fail_at] if args.fail_at else []
+    trainers = []
+
+    def make_trainer():
+        fa = fails.pop(0) if fails else None
+        t = Trainer(cfg, data_cfg, TrainConfig(accum_steps=args.accum, optimizer=opt), tc, fail_at_step=fa)
+        trainers.append(t)
+        return t
+
+    state, restarts = run_with_recovery(make_trainer)
+    print(f"\nfinished at step {int(np.asarray(state['step']))} with {restarts} restart(s)")
+    for m in trainers[-1].metrics_log:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  {m['time_s']*1e3:7.1f} ms/step")
+
+    # The paper's predictor, fed by the run's own monitoring stream:
+    plan = trainers[-1].memory_plan()
+    if plan is not None:
+        print("\nk-Segments host-memory plan for the next training task "
+              "(learned from this run's RSS monitoring):")
+        for i, (b, v) in enumerate(zip(plan.boundaries, plan.values)):
+            print(f"  segment {i+1}: until {b:7.1f}s -> {v:8.1f} MiB")
+    if trainers[-1].straggler.events:
+        print(f"straggler events flagged: {len(trainers[-1].straggler.events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

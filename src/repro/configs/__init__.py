@@ -1,0 +1,28 @@
+# Assigned-architecture registry: get_config("<arch-id>") returns the exact
+# published configuration; get_config(id).reduced() the CPU smoke variant.
+from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeSpec,
+    input_specs,
+    shape_applicable,
+)
+from repro.configs.registry import ARCHS, get_config
+
+__all__ = [
+    "ARCHS",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "SHAPES",
+    "TRAIN_4K",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,48 @@
+# The paper's primary contribution: the k-Segments online memory-over-time
+# predictor (runtime LR + per-segment peak LRs + offsets + retry strategies)
+# and the baselines it is evaluated against.  Substrate subpackages:
+# repro.monitoring (time-series), repro.sim (cluster/workflow simulation),
+# repro.models / train / serve / data / checkpoint / distributed / launch.
+from repro.core.allocation import (
+    AttemptOutcome,
+    StepAllocation,
+    attempt_outcomes_batch,
+    run_with_retries_np,
+    score_attempt_np,
+    static_allocation,
+)
+from repro.core.baselines import DefaultAllocator, TovarPPM, WittLR, make_baseline
+from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+from repro.core.ktuner import AdaptiveKSelector
+from repro.core.predictor import (
+    METHODS,
+    AllocationMethod,
+    KSegmentsMethod,
+    MemoryPredictorService,
+    make_method,
+)
+from repro.core.segmentation import segment_bounds, segment_peaks, segment_peaks_np
+
+__all__ = [
+    "AttemptOutcome",
+    "StepAllocation",
+    "attempt_outcomes_batch",
+    "run_with_retries_np",
+    "score_attempt_np",
+    "static_allocation",
+    "DefaultAllocator",
+    "TovarPPM",
+    "WittLR",
+    "make_baseline",
+    "AdaptiveKSelector",
+    "KSegmentsConfig",
+    "KSegmentsModel",
+    "METHODS",
+    "AllocationMethod",
+    "KSegmentsMethod",
+    "MemoryPredictorService",
+    "make_method",
+    "segment_bounds",
+    "segment_peaks",
+    "segment_peaks_np",
+]

@@ -1,0 +1,145 @@
+"""The k-Segments model (paper Sec. III) — online, sufficient-statistic form.
+
+Two-step prediction:
+
+1. Runtime model: OLS ``runtime ~ total_input_size`` offset *downward* by the
+   largest historical overprediction (paper: "subtract the largest negative
+   historical prediction error").  Underpredicting runtime is safe because the
+   allocation holds its last (largest) value past the predicted end.
+2. Memory model: each historical series is segmented (paper formula, see
+   ``segmentation.py``) and reduced to per-segment peaks; k independent OLS
+   regressions ``peak_s ~ total_input_size`` are offset *upward* by each
+   segment's largest historical underprediction (paper: "add the largest
+   positive prediction error ... on the regressions' intercepts").
+
+Predictions combine into the monotone step function of Eq. (1).
+
+Error offsets are tracked *progressively*: before an execution is folded into
+the statistics, the current model's prediction error on it updates the running
+maxima.  This is the honest online protocol (the model never sees an
+execution before being scored on it) and is strictly conservative w.r.t. the
+paper's "largest historical prediction error".
+
+Units: MiB / seconds (see ``allocation.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import regression
+from repro.core.allocation import StepAllocation
+from repro.core.segmentation import segment_peaks_np
+
+
+@dataclasses.dataclass
+class KSegmentsConfig:
+    k: int = 4  # paper default
+    interval_s: float = 2.0  # paper's monitoring interval
+    floor_mib: float = 100.0  # paper: 100 MB minimum when the model predicts < 0
+    retry_factor: float = 2.0  # paper default l = 2
+    strategy: str = "selective"  # "selective" | "partial"
+    # "insample": offsets are the extreme residuals of the *current* fit over
+    # all historical executions — the literal reading of the paper's "largest
+    # prediction error from historical executions".  "progressive": running
+    # max of one-step-ahead errors (cheaper, O(1) state, strictly more
+    # conservative; used by the lax.scan batch simulator).
+    error_mode: str = "insample"
+
+
+class KSegmentsModel:
+    """Online k-Segments predictor for a single task type."""
+
+    def __init__(self, config: KSegmentsConfig | None = None):
+        self.config = config or KSegmentsConfig()
+        k = self.config.k
+        self._rt_stats = np.zeros(regression.NUM_STATS, dtype=np.float64)
+        self._rt_over_err = 0.0  # max(pred_runtime - actual_runtime, 0) over history
+        self._seg_stats = np.zeros((k, regression.NUM_STATS), dtype=np.float64)
+        self._seg_under_err = np.zeros(k, dtype=np.float64)  # max(actual_peak - pred, 0)
+        self._n_obs = 0
+        self._x0 = 0.0  # input-size reference shift (first observation), for conditioning
+        # History for in-sample residual offsets (error_mode="insample").
+        self._hist_u: list[float] = []
+        self._hist_rt: list[float] = []
+        self._hist_peaks: list[np.ndarray] = []
+
+    # -- state ------------------------------------------------------------
+
+    @property
+    def n_observations(self) -> int:
+        return self._n_obs
+
+    def state(self) -> dict:
+        """Flat state dict — this is exactly the carry of the lax.scan-based
+        batch simulator in ``repro.sim.jax_sim`` (kept in sync by tests)."""
+        return {
+            "rt_stats": self._rt_stats.copy(),
+            "rt_over_err": self._rt_over_err,
+            "seg_stats": self._seg_stats.copy(),
+            "seg_under_err": self._seg_under_err.copy(),
+            "x0": self._x0,
+        }
+
+    # -- online learning ----------------------------------------------------
+
+    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
+        """Fold one finished execution into the model (O(T) + O(k))."""
+        cfg = self.config
+        series = np.asarray(series_mib, dtype=np.float64)
+        runtime = len(series) * cfg.interval_s
+        peaks = segment_peaks_np(series, cfg.k)
+        if self._n_obs == 0:
+            self._x0 = float(input_size)
+        u = float(input_size) - self._x0
+
+        if cfg.error_mode == "progressive" and self._n_obs > 0:
+            rt_pred = float(regression.predict_np(self._rt_stats, u))
+            self._rt_over_err = max(self._rt_over_err, rt_pred - runtime)
+            seg_pred = regression.predict_np(self._seg_stats, u)
+            self._seg_under_err = np.maximum(self._seg_under_err, peaks - seg_pred)
+
+        self._rt_stats = regression.update_stats_np(self._rt_stats, u, runtime)
+        self._seg_stats = regression.update_stats_np(self._seg_stats, u, peaks)
+        self._n_obs += 1
+
+        if cfg.error_mode == "insample":
+            # Residual extremes of the *current* fit over the full history.
+            self._hist_u.append(u)
+            self._hist_rt.append(runtime)
+            self._hist_peaks.append(peaks)
+            hu = np.asarray(self._hist_u)
+            rt_res = regression.predict_np(self._rt_stats, hu) - np.asarray(self._hist_rt)
+            self._rt_over_err = float(rt_res.max())  # largest runtime overprediction
+            seg_pred = regression.predict_np(self._seg_stats[None, :, :], hu[:, None])
+            self._seg_under_err = np.max(np.stack(self._hist_peaks) - seg_pred, axis=0)
+
+    # -- prediction ---------------------------------------------------------
+
+    def predict_runtime(self, input_size: float) -> float:
+        """Offset (under-)predicted runtime, floored at one interval."""
+        raw = float(regression.predict_np(self._rt_stats, float(input_size) - self._x0))
+        return max(raw - max(self._rt_over_err, 0.0), self.config.interval_s)
+
+    def predict(self, input_size: float) -> StepAllocation:
+        """Paper Sec. III-C: the monotone k-step allocation for a new run."""
+        cfg = self.config
+        k = cfg.k
+        r_e = self.predict_runtime(input_size)
+        # Boundaries r_i = i * r_e/k (continuous form of the paper's
+        # r_s = floor(r_e / k); flooring to whole seconds is an artifact of
+        # the paper's integer clock and degenerates for r_e < k).
+        bounds = np.arange(1, k + 1, dtype=np.float64) * (r_e / k)
+        bounds[-1] = r_e
+
+        v = np.asarray(
+            regression.predict_np(self._seg_stats, float(input_size) - self._x0), dtype=np.float64
+        )
+        v = v + np.maximum(self._seg_under_err, 0.0)
+        if v[0] < 0:  # paper: negative first prediction -> 100 MB default
+            v[0] = cfg.floor_mib
+        v = np.maximum.accumulate(v)  # monotone: v_s := max(v_s, v_{s-1})
+        v = np.maximum(v, cfg.floor_mib)
+        return StepAllocation(bounds, v)

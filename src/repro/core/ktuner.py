@@ -1,0 +1,104 @@
+"""Adaptive per-task k selection — the paper's stated future work (Sec. V:
+"explore methods of finding k", Sec. IV-E: "reoptimizing k on each iteration
+during online learning appears to be an option").
+
+Every ``refresh`` observations the selector REPLAYS the task's stored history
+under each candidate k with the jitted lax.scan simulator
+(``sim.jax_sim.simulate_task_scan`` — the batched path whose inner reductions
+are the Pallas kernels) and adopts the wastage-argmin.  Replay is the
+exploration mechanism the paper hints at: it needs no live failures, because
+the history already contains the counterfactual (Fig. 8's wastage-vs-k curve,
+recomputed online).
+
+The live predictor is a fresh ``KSegmentsModel`` refit at the chosen k from
+the same history, so prediction quality matches a model that had used that k
+all along.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+
+DEFAULT_CANDIDATES = (1, 2, 4, 6, 8, 12)
+
+
+class AdaptiveKSelector:
+    """Online k tuner + predictor for one task type."""
+
+    def __init__(
+        self,
+        candidates: tuple[int, ...] = DEFAULT_CANDIDATES,
+        refresh: int = 16,
+        min_history: int = 8,
+        config: KSegmentsConfig | None = None,
+    ):
+        self.candidates = candidates
+        self.refresh = refresh
+        self.min_history = min_history
+        self.base = config or KSegmentsConfig()
+        self.k = self.base.k
+        self._x: list[float] = []
+        self._series: list[np.ndarray] = []
+        self._model = KSegmentsModel(self._cfg(self.k))
+        self.history_k: list[int] = []
+
+    def _cfg(self, k: int) -> KSegmentsConfig:
+        import dataclasses
+
+        return dataclasses.replace(self.base, k=k)
+
+    # -- online protocol ----------------------------------------------------
+
+    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
+        self._x.append(float(input_size))
+        self._series.append(np.asarray(series_mib, dtype=np.float32))
+        self._model.observe(input_size, series_mib)
+        n = len(self._x)
+        if n >= self.min_history and n % self.refresh == 0:
+            best = self._reoptimize()
+            self.history_k.append(best)
+            if best != self.k:
+                self.k = best
+                self._model = KSegmentsModel(self._cfg(best))
+                for x, s in zip(self._x, self._series):
+                    self._model.observe(x, s)
+
+    def predict(self, input_size: float):
+        return self._model.predict(input_size)
+
+    # -- the replay (Fig. 8 recomputed online) --------------------------------
+
+    def _padded(self):
+        B = len(self._series)
+        T = max(len(s) for s in self._series)
+        y = np.zeros((B, T), np.float32)
+        lengths = np.zeros(B, np.int32)
+        for i, s in enumerate(self._series):
+            y[i, : len(s)] = s
+            lengths[i] = len(s)
+        return np.asarray(self._x), y, lengths
+
+    def _reoptimize(self) -> int:
+        import jax.numpy as jnp
+
+        from repro.sim.jax_sim import simulate_task_scan
+
+        x, y, lengths = self._padded()
+        n_train = max(len(x) // 2, 1)
+        scores = {}
+        for k in self.candidates:
+            waste, _ = simulate_task_scan(
+                jnp.asarray(x),
+                jnp.asarray(y),
+                jnp.asarray(lengths),
+                k=k,
+                interval_s=self.base.interval_s,
+                selective=self.base.strategy == "selective",
+                factor=self.base.retry_factor,
+                floor_mib=self.base.floor_mib,
+                n_train=n_train,
+            )
+            scores[k] = float(np.asarray(waste)[n_train:].mean())
+        return min(scores, key=scores.get)

@@ -1,0 +1,126 @@
+"""Online memory-prediction service — the component Fig. 2/6 of the paper
+calls "memory predictor".
+
+One ``AllocationMethod`` instance exists per (task type, method); the
+``MemoryPredictorService`` keeps the registry and is what the workflow
+simulator (``repro.sim``), the serving admission controller
+(``repro.serve.admission``) and the launcher's host-memory packer talk to.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.allocation import StepAllocation
+from repro.core.baselines import make_baseline
+from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+
+METHODS = (
+    "default",
+    "witt-lr",
+    "witt-lr-max",
+    "ppm",
+    "ppm-improved",
+    "ksegments-selective",
+    "ksegments-partial",
+)
+
+
+class AllocationMethod(Protocol):
+    """What the scheduler needs from any predictor."""
+
+    def predict(self, input_size: float) -> StepAllocation: ...
+
+    def observe(self, input_size: float, series_mib: np.ndarray) -> None: ...
+
+    def on_failure(
+        self, alloc: StepAllocation, failed_segment: int, node_cap_mib: float
+    ) -> StepAllocation: ...
+
+
+class KSegmentsMethod:
+    """Adapter: k-Segments model + its retry strategy behind the common API."""
+
+    def __init__(self, default_mib: float, config: KSegmentsConfig):
+        self.model = KSegmentsModel(config)
+        self.default_mib = float(default_mib)
+
+    def predict(self, input_size: float) -> StepAllocation:
+        if self.model.n_observations == 0:
+            return StepAllocation(np.asarray([1.0]), np.asarray([self.default_mib]))
+        return self.model.predict(input_size)
+
+    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
+        self.model.observe(input_size, series_mib)
+
+    def on_failure(self, alloc, failed_segment, node_cap_mib):
+        cfg = self.model.config
+        new = alloc.with_retry(failed_segment, cfg.strategy, cfg.retry_factor)
+        new.values = np.minimum(new.values, node_cap_mib)
+        return new
+
+
+class _StaticAdapter:
+    """Baselines ignore which segment failed (they have only one)."""
+
+    def __init__(self, baseline):
+        self.baseline = baseline
+
+    def predict(self, input_size):
+        return self.baseline.predict(input_size)
+
+    def observe(self, input_size, series_mib):
+        self.baseline.observe(input_size, series_mib)
+
+    def on_failure(self, alloc, failed_segment, node_cap_mib):
+        return self.baseline.on_failure(alloc, node_cap_mib)
+
+
+def make_method(
+    name: str,
+    default_mib: float,
+    node_cap_mib: float,
+    ksegments_config: KSegmentsConfig | None = None,
+) -> AllocationMethod:
+    name = name.lower()
+    if name.startswith("ksegments"):
+        import dataclasses
+
+        cfg = ksegments_config or KSegmentsConfig()
+        strategy = name.split("-", 1)[1] if "-" in name else cfg.strategy
+        cfg = dataclasses.replace(cfg, strategy=strategy)
+        return KSegmentsMethod(default_mib, cfg)
+    return _StaticAdapter(make_baseline(name, default_mib, node_cap_mib))
+
+
+class MemoryPredictorService:
+    """Per-task-type registry of online predictors (paper Fig. 2, green box)."""
+
+    def __init__(
+        self,
+        method: str = "ksegments-selective",
+        node_cap_mib: float = 128 * 1024.0,
+        ksegments_config: KSegmentsConfig | None = None,
+    ):
+        self.method = method
+        self.node_cap_mib = node_cap_mib
+        self.ksegments_config = ksegments_config or KSegmentsConfig()
+        self._models: dict[str, AllocationMethod] = {}
+
+    def _get(self, task_type: str, default_mib: float) -> AllocationMethod:
+        if task_type not in self._models:
+            self._models[task_type] = make_method(
+                self.method, default_mib, self.node_cap_mib, self.ksegments_config
+            )
+        return self._models[task_type]
+
+    def predict(self, task_type: str, input_size: float, default_mib: float) -> StepAllocation:
+        return self._get(task_type, default_mib).predict(input_size)
+
+    def observe(self, task_type: str, input_size: float, series_mib, default_mib: float = 1024.0) -> None:
+        self._get(task_type, default_mib).observe(input_size, np.asarray(series_mib))
+
+    def on_failure(self, task_type: str, alloc: StepAllocation, failed_segment: int, default_mib: float = 1024.0):
+        return self._get(task_type, default_mib).on_failure(alloc, failed_segment, self.node_cap_mib)

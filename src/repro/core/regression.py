@@ -1,0 +1,106 @@
+"""Closed-form simple linear regression in sufficient-statistic form.
+
+The paper fits ``sklearn.LinearRegression`` per task type (runtime model) and per
+segment (k memory models).  We keep each regression as five running sufficient
+statistics ``(n, Sx, Sxx, Sy, Sxy)`` so that
+
+* online updates after each finished task execution are O(1), and
+* whole banks of regressions (k segments x many task types) evaluate as one
+  vectorized ``jnp`` expression, which is what the Pallas ``fitstats`` kernel
+  accumulates on TPU.
+
+All functions are pure and shape-polymorphic: statistics may carry arbitrary
+leading batch dimensions ``(..., 5)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Statistic layout along the trailing axis.
+N, SX, SXX, SY, SXY = 0, 1, 2, 3, 4
+NUM_STATS = 5
+
+# Degenerate-fit guard: denominators below this fall back to the mean model.
+_EPS = 1e-9
+
+
+def empty_stats(*batch_shape: int, dtype=jnp.float32) -> jnp.ndarray:
+    """A bank of regressions with no observations."""
+    return jnp.zeros((*batch_shape, NUM_STATS), dtype=dtype)
+
+
+def update_stats(stats: jnp.ndarray, x, y) -> jnp.ndarray:
+    """Fold one observation ``(x, y)`` into each regression of the bank.
+
+    ``x``/``y`` broadcast against the batch shape, so one call can update a
+    whole bank of k segment regressions with their k segment peaks.
+    """
+    x = jnp.asarray(x, stats.dtype)
+    y = jnp.asarray(y, stats.dtype)
+    upd = jnp.stack(
+        [jnp.ones_like(y), jnp.broadcast_to(x, y.shape), jnp.broadcast_to(x * x, y.shape), y, x * y],
+        axis=-1,
+    )
+    return stats + upd
+
+
+def merge_stats(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Sufficient statistics of the union of two observation sets."""
+    return a + b
+
+
+def fit(stats: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Solve each regression: returns ``(intercept, slope)``.
+
+    Degenerate cases follow the paper's sklearn behaviour as closely as a
+    closed form can: with fewer than two observations or a rank-deficient
+    design (all x identical) the slope is 0 and the intercept is the mean of
+    the observed y (0 when empty).
+    """
+    n = stats[..., N]
+    sx, sxx, sy, sxy = stats[..., SX], stats[..., SXX], stats[..., SY], stats[..., SXY]
+    denom = n * sxx - sx * sx
+    safe = jnp.abs(denom) > _EPS
+    slope = jnp.where(safe, (n * sxy - sx * sy) / jnp.where(safe, denom, 1.0), 0.0)
+    n_safe = jnp.maximum(n, 1.0)
+    intercept = jnp.where(n > 0, (sy - slope * sx) / n_safe, 0.0)
+    return intercept, slope
+
+
+def predict(stats: jnp.ndarray, x) -> jnp.ndarray:
+    """Evaluate each regression of the bank at ``x`` (broadcasting)."""
+    intercept, slope = fit(stats)
+    return intercept + slope * jnp.asarray(x, stats.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plain-numpy float64 twins.  The sequential online models (one observation at
+# a time) use these: no per-observation JAX dispatch, and full double
+# precision.  The jnp versions above back the batched/lax.scan paths, which
+# keep float32 safe by accumulating over *shifted* inputs u = x - x0 (the
+# caller picks x0, typically the first observed input size) — raw input sizes
+# are byte-scale (~1e10) and would cancel catastrophically in f32.
+# ---------------------------------------------------------------------------
+
+
+def update_stats_np(stats: np.ndarray, x: float, y) -> np.ndarray:
+    y = np.asarray(y, dtype=np.float64)
+    upd = np.stack([np.ones_like(y), np.broadcast_to(x, y.shape), np.broadcast_to(x * x, y.shape), y, x * y], axis=-1)
+    return stats + upd
+
+
+def fit_np(stats: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    n = stats[..., N]
+    sx, sxx, sy, sxy = stats[..., SX], stats[..., SXX], stats[..., SY], stats[..., SXY]
+    denom = n * sxx - sx * sx
+    safe = np.abs(denom) > _EPS
+    slope = np.where(safe, (n * sxy - sx * sy) / np.where(safe, denom, 1.0), 0.0)
+    intercept = np.where(n > 0, (sy - slope * sx) / np.maximum(n, 1.0), 0.0)
+    return intercept, slope
+
+
+def predict_np(stats: np.ndarray, x) -> np.ndarray:
+    intercept, slope = fit_np(stats)
+    return intercept + slope * x

@@ -1,0 +1,93 @@
+"""Time-series segmentation exactly as defined in the paper (Sec. III-B).
+
+A monitored memory series ``Y`` of length ``j`` is split by ``k-1`` change
+points into ``k`` segments where the first ``k-1`` segments have length
+``i = floor(j / k)`` and the last segment absorbs the remainder:
+
+    Y* = ((y_1..y_i), (y_{i+1}..y_{2i}), ..., (y_{(k-1)i+1}..y_j))
+
+Each segment is then reduced to its peak ``Y** = (max(s_1), ..., max(s_k))``.
+
+Series shorter than ``k`` samples (i == 0) degenerate under the paper formula;
+we extend it minimally: empty segments inherit the running peak so that the
+result stays defined and monotone w.r.t. adding samples.  Real traces have
+``j >> k`` so this path only guards pathological inputs.
+
+Everything here operates on PADDED batches ``(B, T)`` with explicit lengths so
+it can be jitted / lowered to the Pallas ``segmax`` kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -jnp.inf
+
+
+def segment_bounds(length, k: int):
+    """Start/end sample indices ((k,), (k,)) of the paper's segmentation.
+
+    ``length`` may be a traced scalar or a (B,) vector; bounds broadcast to
+    ``(..., k)``.  Segment s (0-based) covers ``[s*i, (s+1)*i)`` for s < k-1
+    and ``[(k-1)*i, j)`` for the last one.
+    """
+    length = jnp.asarray(length)
+    i = jnp.maximum(length // k, 1)  # guard i == 0 (j < k)
+    s = jnp.arange(k)
+    starts = jnp.minimum(s * i[..., None], length[..., None])
+    ends = jnp.where(s == k - 1, length[..., None], jnp.minimum((s + 1) * i[..., None], length[..., None]))
+    ends = jnp.maximum(ends, starts)
+    return starts, ends
+
+
+def segment_peaks(y: jnp.ndarray, lengths, k: int) -> jnp.ndarray:
+    """Per-segment peaks for a padded batch.
+
+    Args:
+      y: (B, T) padded memory series (padding values are ignored).
+      lengths: (B,) valid sample counts, 1 <= length <= T.
+      k: number of segments (static).
+
+    Returns:
+      (B, k) segment peak matrix; empty segments carry the previous segment's
+      peak (first segment of an empty series would be 0, but lengths >= 1).
+    """
+    y = jnp.asarray(y)
+    if y.ndim == 1:
+        return segment_peaks(y[None], jnp.asarray(lengths)[None], k)[0]
+    B, T = y.shape
+    lengths = jnp.asarray(lengths)
+    starts, ends = segment_bounds(lengths, k)  # (B, k)
+    pos = jnp.arange(T)[None, None, :]  # (1, 1, T)
+    mask = (pos >= starts[..., None]) & (pos < ends[..., None])  # (B, k, T)
+    peaks = jnp.max(jnp.where(mask, y[:, None, :], _NEG), axis=-1)  # (B, k)
+    # Empty segments (start == end) inherit the PREVIOUS segment's peak
+    # (forward fill — not the running max; a falling series must not have an
+    # empty tail report the global maximum).
+    has = jnp.isfinite(peaks)
+    pos = jnp.arange(k)[None, :]
+    last_idx = jnp.maximum.accumulate(jnp.where(has, pos, -1), axis=-1)
+    filled = jnp.take_along_axis(peaks, jnp.maximum(last_idx, 0), axis=-1)
+    peaks = jnp.where(has, peaks, filled)
+    return jnp.where(jnp.isfinite(peaks), peaks, 0.0)
+
+
+def segment_peaks_np(y: np.ndarray, k: int) -> np.ndarray:
+    """Plain-numpy oracle for a single unpadded series (used by tests and the
+    sequential reference simulator)."""
+    y = np.asarray(y, dtype=np.float64)
+    j = len(y)
+    if j == 0:
+        return np.zeros(k)
+    i = max(j // k, 1)
+    peaks = np.empty(k)
+    prev = y[0]
+    for s in range(k):
+        lo = min(s * i, j)
+        hi = j if s == k - 1 else min((s + 1) * i, j)
+        hi = max(hi, lo)
+        if hi > lo:
+            prev = float(np.max(y[lo:hi]))
+        peaks[s] = prev
+    return peaks

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLMData, make_host_batch
+
+__all__ = ["DataConfig", "SyntheticLMData", "make_host_batch"]

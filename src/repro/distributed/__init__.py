@@ -1,0 +1,13 @@
+# Distribution substrate: sharding rules (FSDP x TP x EP over
+# ("pod","data","model")), fault tolerance, elastic re-meshing and
+# straggler mitigation (driven by the paper's runtime model).
+from repro.distributed.sharding import (
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    data_specs,
+    param_specs,
+    sanitize_spec,
+)
+
+__all__ = ["batch_axes", "batch_spec", "cache_specs", "data_specs", "param_specs", "sanitize_spec"]

@@ -1,0 +1,71 @@
+"""Elastic scaling: re-mesh a training state across a changed device pool.
+
+Large fleets lose and gain hosts; the data axis is the elastic one (the
+model axis is fixed by the TP/EP layout).  ``plan_transition`` recomputes the
+parallelism arithmetic so the *global* batch (and therefore the optimizer
+trajectory) is preserved: fewer data shards -> more gradient-accumulation
+microsteps.  ``remesh`` moves an existing state onto the new mesh by
+re-device_put-ing every leaf with its re-derived sharding — combined with
+``checkpoint.restore(shardings=...)`` this covers both live resharding and
+restart-into-different-topology recovery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_data: int
+    new_data: int
+    global_batch: int
+    accum_steps: int  # new accumulation factor
+    per_device_batch: int
+
+    @property
+    def changed(self) -> bool:
+        return self.old_data != self.new_data
+
+
+def plan_transition(global_batch: int, old_data: int, new_data: int, microbatch_per_device: int = 1) -> ElasticPlan:
+    """Keep the global batch fixed while the data-parallel width changes."""
+    if global_batch % new_data != 0:
+        # shrink to the largest data width that divides the batch
+        while global_batch % new_data != 0:
+            new_data -= 1
+    per_shard = global_batch // new_data
+    accum = max(per_shard // max(microbatch_per_device, 1), 1)
+    while per_shard % accum != 0:
+        accum -= 1
+    return ElasticPlan(
+        old_data=old_data,
+        new_data=new_data,
+        global_batch=global_batch,
+        accum_steps=accum,
+        per_device_batch=per_shard // accum,
+    )
+
+
+def remesh(state, cfg: ModelConfig, new_mesh: Mesh):
+    """device_put every leaf of a train state onto the new mesh using the
+    same rule set (params/opt moments share specs; scalars replicate)."""
+    p_specs = param_specs(jax.eval_shape(lambda: state["params"]), cfg, new_mesh)
+    mu_specs = param_specs(jax.eval_shape(lambda: state["opt"]["mu"]), cfg, new_mesh)
+    nu_specs = param_specs(jax.eval_shape(lambda: state["opt"]["nu"]), cfg, new_mesh)
+    rep = jax.sharding.NamedSharding(new_mesh, jax.sharding.PartitionSpec())
+    return {
+        "params": jax.device_put(state["params"], p_specs),
+        "opt": {
+            "mu": jax.device_put(state["opt"]["mu"], mu_specs),
+            "nu": jax.device_put(state["opt"]["nu"], nu_specs),
+            "step": jax.device_put(state["opt"]["step"], rep),
+        },
+        "step": jax.device_put(state["step"], rep),
+    }

@@ -1,0 +1,167 @@
+"""Sharding rules: parameters 2-D sharded (FSDP over ("pod","data") x TP/EP
+over "model"), activations batch-sharded, KV caches batch+head_dim sharded.
+
+Rules are *name-based* over the params pytree (the param dict layout in
+models/model.py is the contract) and every spec passes ``sanitize_spec``,
+which drops mesh axes that do not divide the corresponding dimension (e.g.
+hubert's 504-way vocab stays replicated instead of tripping GSPMD padding).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+FSDP_CANDIDATES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch (and FSDP parameter dim) shards over."""
+    return tuple(a for a in FSDP_CANDIDATES if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop axes that don't evenly divide their dimension."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        # progressively drop trailing axes until the product divides
+        while axes_t and dim % _axis_size(mesh, axes_t) != 0:
+            axes_t = axes_t[:-1]
+        out.append(axes_t if len(axes_t) > 1 else (axes_t[0] if axes_t else None))
+    return P(*out)
+
+
+def _rule(path: tuple[str, ...], ndim: int, cfg: ModelConfig, fsdp) -> P:
+    """Base spec for an *unstacked* param, by name (+ parent for ambiguity)."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    if name == "embed":
+        return P(MODEL_AXIS, fsdp)
+    if name == "lm_head":
+        return P(fsdp, MODEL_AXIS)
+    if name == "frontend_proj":
+        return P(None, fsdp)
+    if parent == "moe":
+        if name == "router":
+            return P(fsdp, None)
+        if cfg.moe_sharding == "ep":
+            return P(MODEL_AXIS, fsdp, None) if name in ("wi", "wg") else P(MODEL_AXIS, None, fsdp)
+        return P(None, fsdp, MODEL_AXIS) if name in ("wi", "wg") else P(None, MODEL_AXIS, fsdp)
+    if parent == "cm" and name == "wv":  # rwkv channel-mix down proj (F, D)
+        return P(MODEL_AXIS, fsdp)
+    if name in ("wq", "wk", "wv", "wg", "wi", "wr", "wa", "w_branch", "w_rnn"):
+        return P(fsdp, MODEL_AXIS)
+    if name in ("wo", "wb", "w_out"):
+        return P(MODEL_AXIS, fsdp)
+    if name in ("w_r", "w_i"):  # rg-lru gates (R, R)
+        return P(MODEL_AXIS, None)
+    if name == "conv_w":
+        return P(None, MODEL_AXIS)
+    if name in ("conv_b", "lam"):
+        return P(MODEL_AXIS)
+    return P()  # norms, mixing coefficients, biases: replicated
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of NamedSharding matching a params (shape-)pytree.
+
+    "tp" parallelism: name-based FSDP x TP rules (``_rule``).
+    "fsdp" parallelism: every >=2-D weight shards its first (stacked: second)
+    dim over ALL mesh axes — no tensor split."""
+    fsdp = batch_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    def assign(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        stacked = "blocks" in keys
+        import os
+
+        vocab_tp = os.environ.get("REPRO_FSDP_VOCAB", "tp") == "tp"
+        if cfg.parallelism == "fsdp" and not (vocab_tp and keys[-1] in ("embed", "lm_head")):
+            base = P(all_axes) if leaf.ndim >= (3 if stacked else 2) else P()
+        else:
+            # embed/lm_head stay vocab-parallel in BOTH modes: replicated-vocab
+            # logits are (B,T,V) f32 monsters and drag the whole CE backward
+            # into full all-gathers/all-reduces of the embedding.
+            base = _rule(keys, leaf.ndim, cfg, fsdp)
+        spec = P(None, *base) if stacked else base
+        spec = sanitize_spec(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    ba = batch_axes(mesh)
+    return P(ba if len(ba) > 1 else ba[0] if ba else None)
+
+
+def data_specs(mesh: Mesh, inputs, cfg: ModelConfig):
+    """NamedSharding for step inputs: batch over the data axes (in "fsdp"
+    parallelism the model axis joins the batch; the sanitizer drops it for
+    small-batch shapes).
+
+    mrope positions are (3, B, T): batch is dim 1."""
+    if cfg.parallelism == "fsdp":
+        axes = tuple(a for a in ("data", "model", "pod") if a in mesh.axis_names)
+    else:
+        axes = batch_axes(mesh)
+    ba = P(axes if len(axes) > 1 else axes[0] if axes else None)
+
+    def assign(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        name = keys[-1] if keys else ""
+        if name == "mrope_positions":
+            spec = P(None, *ba)
+        else:
+            spec = P(*ba, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, inputs)
+
+
+def cache_specs(mesh: Mesh, cache_shape, cfg: ModelConfig):
+    """Decode cache sharding: batch over data axes; head_dim (attention k/v)
+    or recurrent width over the model axis.  KV-head counts (4-8) don't
+    divide a 16-way model axis, so the head_dim is the TP dimension of the
+    cache — per-device cache = B/dp x S x KV x hd/tp."""
+    ba = batch_spec(mesh)
+    batch = tuple(ba)[0]
+
+    def assign(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        stacked = "blocks" in keys
+        name = keys[-1]
+        if name in ("k", "v"):  # (B, S, KV, hd)
+            spec = (batch, None, None, MODEL_AXIS)
+        elif name == "pos":  # (B, S)
+            spec = (batch, None)
+        elif name == "wkv":  # rwkv state (B, H, hd, hd)
+            spec = (batch, MODEL_AXIS, None, None)
+        elif name in ("shift", "cm_shift", "h"):  # (B, D) / (B, R)
+            spec = (batch, MODEL_AXIS)
+        elif name == "conv":  # (B, cw-1, R)
+            spec = (batch, None, MODEL_AXIS)
+        else:
+            spec = (batch,) + (None,) * (leaf.ndim - 1)
+        full = P(None, *spec) if stacked else P(*spec)
+        return NamedSharding(mesh, sanitize_spec(mesh, full, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the predictor's compute hot spots (validated in
+# interpret mode on CPU):
+#   segmax   — per-segment peak reduction over batched monitoring series
+#   fitstats — per-segment OLS sufficient statistics
+#   wastage  — attempt scoring (GiB*s wastage + first-OOM) under k-step allocs
+# ops.py holds the jitted public wrappers; ref.py the pure-jnp oracles.
+from repro.kernels.flash import flash_attention_pallas
+from repro.kernels.ops import attempt_wastage, fit_stats, segment_peaks
+
+__all__ = ["attempt_wastage", "fit_stats", "flash_attention_pallas", "segment_peaks"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: OLS sufficient statistics for the k segment regressions.
+
+Folds a batch of executions — input sizes x (B,), per-segment peaks (B, k),
+validity mask (B,) — into the (5, k) statistic bank
+``(n, Sx, Sxx, Sy, Sxy)`` per segment (see core/regression.py).  This is the
+batch/refit path of the predictor (the Fig. 8 k-sweep refits every candidate
+k over the full corpus each round); the O(1) online update stays on the host.
+
+TPU adaptation: one revisited (8, 128) output block accumulates the bank;
+the batch axis streams through VMEM in 512-row tiles.  Inputs arrive
+pre-shifted (u = x - x0) so f32 accumulation is well-conditioned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 512
+K_PAD = 128
+NUM_STATS = 5
+STATS_PAD = 8  # sublane-aligned rows: n, Sx, Sxx, Sy, Sxy, 0, 0, 0
+
+
+def _fitstats_kernel(x_ref, peaks_ref, valid_ref, out_ref, *, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (BLOCK_B, 1)
+    w = valid_ref[...]  # (BLOCK_B, 1) f32 0/1
+    peaks = peaks_ref[...]  # (BLOCK_B, K_PAD)
+
+    n = jnp.sum(w)
+    sx = jnp.sum(w * x)
+    sxx = jnp.sum(w * x * x)
+    sy = jnp.sum(w * peaks, axis=0)  # (K_PAD,)
+    sxy = jnp.sum(w * x * peaks, axis=0)
+
+    ones = jnp.ones((1, K_PAD), jnp.float32)
+    out_ref[0, :] += n * ones[0]
+    out_ref[1, :] += sx * ones[0]
+    out_ref[2, :] += sxx * ones[0]
+    out_ref[3, :] += sy
+    out_ref[4, :] += sxy
+
+
+def fitstats_pallas(x: jax.Array, peaks: jax.Array, valid: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Returns the (k, NUM_STATS) statistic bank.  B % BLOCK_B == 0 required
+    (ops.py pads with valid=0 rows, which contribute nothing)."""
+    B, k = peaks.shape
+    assert B % BLOCK_B == 0 and k <= K_PAD
+    peaks_p = jnp.zeros((B, K_PAD), jnp.float32).at[:, :k].set(peaks.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_fitstats_kernel, k=k),
+        grid=(B // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, K_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((STATS_PAD, K_PAD), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((STATS_PAD, K_PAD), jnp.float32),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32).reshape(B, 1),
+        peaks_p,
+        valid.astype(jnp.float32).reshape(B, 1),
+    )
+    return out[:NUM_STATS, :k].T  # (k, 5) — matches core.regression layout

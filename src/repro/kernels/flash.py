@@ -1,0 +1,154 @@
+"""Pallas TPU flash attention (forward).
+
+Why this kernel exists (SPerf iteration): the pure-XLA flash path
+(models/layers.flash_attention) materializes the per-chunk f32 score tensor
+(B,T,H,C) in HBM on every KV step — on the dry-run HLO it is the single
+largest byte consumer for every attention arch.  A fused kernel keeps scores
+in VMEM: HBM traffic drops to q+k+v+o (+softmax stats), i.e. O(T*(H*hd))
+instead of O(T^2*H) bytes.
+
+Design (TPU-native):
+  grid = (B*H, ceil(Tq/BLOCK_Q), ceil(S/BLOCK_K)) — KV innermost so the
+  (BLOCK_Q, hd) accumulator and (BLOCK_Q,) m/l stats persist in the revisited
+  output block across KV steps (sequential TPU grid).
+  Causal masking is position-based (q_pos/k_pos prefetch rows), which also
+  covers decode's ragged rolling caches; fully-masked (q,k) block pairs are
+  cheap but NOT skipped in interpret mode — on real TPU the same kernel with
+  a triangular index_map skips them (documented; the roofline accounts
+  attention FLOPs analytically either way).
+  GQA: the kernel receives k/v indexed per q-head via an index_map that maps
+  head h -> kv head h // G, so no expanded k/v ever exists in HBM.
+
+Validated in interpret mode against models/layers.flash_attention (tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 256
+BLOCK_K = 512
+NEG = -1.0e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, window, softcap, block_k):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (BLOCK_Q, hd) — operands stay bf16: MXU semantics
+    k = k_ref[0]  # (BLOCK_K, hd)   (bf16 multiply, f32 accumulate), matching
+    v = v_ref[0]  # the XLA flash path bit for bit on real hardware
+    qp = qpos_ref[0]  # (BLOCK_Q,) int32
+    kp = kpos_ref[0]  # (BLOCK_K,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = (kp >= 0)[None, :]
+    if causal:
+        ok = ok & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        ok = ok & (kp[None, :] > qp[:, None] - window)
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_ref[0, :, 0]  # (BLOCK_Q,)
+    l_prev = l_ref[0, :, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    o_new = o_ref[0] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0, :, 0] = m_new
+    l_ref[0, :, 0] = l_new
+    o_ref[0] = o_new
+
+
+def flash_attention_pallas(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    interpret: bool = True,
+):
+    """q: (B, T, H, hd); k, v: (B, S, KV, hd); q_pos: (B, T); k_pos: (B, S).
+
+    Returns (B, T, H, hd) in q.dtype.  T, S padded to block multiples here;
+    H % KV == 0.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd**-0.5
+
+    bq = min(BLOCK_Q, T)
+    bk = min(BLOCK_K, S)
+    Tp, Sp = -(-T // bq) * bq, -(-S // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos.astype(jnp.int32), ((0, 0), (0, Tp - T)), constant_values=2**30)
+    kpos = jnp.pad(k_pos.astype(jnp.int32), ((0, 0), (0, Sp - S)), constant_values=-1)
+
+    # (B, T, H, hd) -> (B*H, T, hd) per-head layout
+    qh = qp.transpose(0, 2, 1, 3).reshape(B * H, Tp, hd)
+    kh = kp_.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+    vh = vp.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+
+    grid = (B * H, Tp // bq, Sp // bk)
+
+    def q_map(h, i, j):
+        return (h, i, 0)
+
+    def kv_map(h, i, j):
+        return ((h // H) * KV + (h % H) // G, j, 0)  # GQA: q head -> kv head
+
+    def qpos_map(h, i, j):
+        return (h // H, i)
+
+    def kpos_map(h, i, j):
+        return (h // H, j)
+
+    out, m, l = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window, softcap=softcap, block_k=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), qpos_map),
+            pl.BlockSpec((1, bk), kpos_map),
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda h, i, j: (h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Tp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, Tp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, Tp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qh, kh, vh)
+
+    out = out / jnp.maximum(l, 1e-30)
+    out = out.reshape(B, H, Tp, hd).transpose(0, 2, 1, 3)[:, :T]
+    return out.astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles padding to TPU tile multiples, sentinel finalization, and backend
+selection: on CPU (this container) the kernels execute in interpret mode,
+which runs the exact kernel bodies in Python — the TPU lowering is identical
+code with ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fitstats as _fitstats
+from repro.kernels import segmax as _segmax
+from repro.kernels import wastage as _wastage
+
+MIB_PER_GIB = 1024.0
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(a: jax.Array, mult: int, fill=0):
+    B = a.shape[0]
+    pad = (-B) % mult
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def _pad_cols(a: jax.Array, mult: int, fill=0):
+    T = a.shape[1]
+    pad = (-T) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, [(0, 0), (0, pad)], constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def segment_peaks(y: jax.Array, lengths: jax.Array, k: int, *, interpret: bool | None = None) -> jax.Array:
+    """(B, T) padded series + (B,) lengths -> (B, k) segment peaks.
+
+    Matches ``core.segmentation.segment_peaks`` (the jnp oracle): empty
+    segments inherit the running peak from the left.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    B = y.shape[0]
+    yp = _pad_cols(_pad_rows(y, _segmax.BLOCK_B), _segmax.BLOCK_T)
+    lp = _pad_rows(jnp.maximum(lengths, 1), _segmax.BLOCK_B, fill=1)
+    peaks = _segmax.segmax_pallas(yp, lp, k, interpret=interpret)[:B]
+    # forward-fill empty segments (sentinel -big) with the previous segment's
+    # peak (matching core.segmentation semantics)
+    neg = peaks <= jnp.float32(-1.0e38)
+    pos = jnp.arange(k)[None, :]
+    last_idx = jnp.maximum.accumulate(jnp.where(~neg, pos, -1), axis=-1)
+    filled = jnp.take_along_axis(peaks, jnp.maximum(last_idx, 0), axis=-1)
+    out = jnp.where(neg, filled, peaks)
+    return jnp.where(out <= jnp.float32(-1.0e38), 0.0, out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fit_stats(x: jax.Array, peaks: jax.Array, valid: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """(B,) inputs + (B, k) segment peaks + (B,) mask -> (k, 5) OLS bank.
+
+    ``x`` should be pre-shifted (u = x - x0) for f32 conditioning.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    xp = _pad_rows(x.reshape(-1), _fitstats.BLOCK_B)
+    pp = _pad_rows(peaks, _fitstats.BLOCK_B)
+    vp = _pad_rows(valid.astype(jnp.float32).reshape(-1), _fitstats.BLOCK_B)
+    return _fitstats.fitstats_pallas(xp, pp, vp, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interval_s", "interpret"))
+def attempt_wastage(
+    y: jax.Array,
+    lengths: jax.Array,
+    bounds: jax.Array,
+    values: jax.Array,
+    interval_s: float,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batch attempt scoring -> (wastage GiB*s (B,), failure index (B,), -1 on success).
+
+    Matches ``core.allocation.attempt_outcomes_batch`` / ``score_attempt_np``.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    B = y.shape[0]
+    yp = _pad_cols(_pad_rows(y, _wastage.BLOCK_B), _wastage.BLOCK_T)
+    lp = _pad_rows(jnp.maximum(lengths, 0), _wastage.BLOCK_B)
+    bp = _pad_rows(bounds, _wastage.BLOCK_B)
+    vp = _pad_rows(values, _wastage.BLOCK_B)
+    raw = _wastage.wastage_pallas(yp, lp, bp, vp, interval_s, interpret=interpret)[:B]
+    failed = raw[:, 3] > 0.0
+    waste = jnp.where(failed, raw[:, 1], raw[:, 0]) * interval_s / MIB_PER_GIB
+    fail_idx = jnp.where(failed, raw[:, 2].astype(jnp.int32), -1)
+    return waste, fail_idx

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one wrapper in ``ops.py`` with identical signatures and
+semantics; tests sweep shapes/dtypes and assert allclose between the two.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import regression
+from repro.core.allocation import attempt_outcomes_batch
+from repro.core.segmentation import segment_peaks as _segment_peaks_jnp
+
+
+def segment_peaks(y: jnp.ndarray, lengths: jnp.ndarray, k: int) -> jnp.ndarray:
+    return _segment_peaks_jnp(y, jnp.maximum(lengths, 1), k).astype(jnp.float32)
+
+
+def fit_stats(x: jnp.ndarray, peaks: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """(k, 5) sufficient statistics via masked vectorized update."""
+    w = valid.astype(jnp.float32).reshape(-1, 1)  # (B, 1)
+    x = x.astype(jnp.float32).reshape(-1, 1)
+    p = peaks.astype(jnp.float32)  # (B, k)
+    n = jnp.sum(w) * jnp.ones((p.shape[1],), jnp.float32)
+    sx = jnp.sum(w * x) * jnp.ones_like(n)
+    sxx = jnp.sum(w * x * x) * jnp.ones_like(n)
+    sy = jnp.sum(w * p, axis=0)
+    sxy = jnp.sum(w * x * p, axis=0)
+    out = jnp.stack([n, sx, sxx, sy, sxy], axis=-1)  # (k, 5)
+    assert out.shape[-1] == regression.NUM_STATS
+    return out
+
+
+def attempt_wastage(
+    y: jnp.ndarray,
+    lengths: jnp.ndarray,
+    bounds: jnp.ndarray,
+    values: jnp.ndarray,
+    interval_s: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return attempt_outcomes_batch(
+        y.astype(jnp.float32), lengths, interval_s, bounds.astype(jnp.float32), values.astype(jnp.float32)
+    )

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: per-segment peak reduction over batches of monitoring
+series (the paper's ``Y** = (max(s_1), ..., max(s_k))``, Sec. III-B).
+
+The online predictor re-reduces thousands of padded series every learning
+round (and the Fig. 8 k-sweep re-reduces the full corpus for every k), making
+this the predictor's dominant data-parallel loop.  TPU adaptation: rows are
+tiled 8-sublane x 512-lane VMEM blocks streamed over the time axis; the (B, k)
+peak matrix lives in a revisited output block that accumulates block-local
+maxima, so each series is read from HBM exactly once.
+
+Segment boundaries are row-dependent (each series has its own length j and
+segment size i = floor(j/k)), so the kernel computes per-row masks instead of
+a static partition — k is small and static, so this is k fused compare+select
+passes over each VMEM block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU-native tile: 8 sublanes x 512 lanes (f32); peaks padded to a full lane
+# group so the output block is (8, 128)-aligned.
+BLOCK_B = 8
+BLOCK_T = 512
+K_PAD = 128
+
+_NEG = -3.0e38  # plain float: jnp constants would be captured as kernel consts
+
+
+def _segmax_kernel(y_ref, len_ref, out_ref, *, k: int, block_t: int):
+    """Grid (B/BLOCK_B, T/BLOCK_T); the T axis revisits the same out block."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _NEG)
+
+    y = y_ref[...]  # (BLOCK_B, BLOCK_T)
+    length = len_ref[...]  # (BLOCK_B, 1) int32
+    pos = j * block_t + jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+    seg_len = jnp.maximum(length // k, 1)  # paper: i = floor(j/k), guarded
+
+    for s in range(k):
+        start = s * seg_len
+        end = length if s == k - 1 else jnp.minimum((s + 1) * seg_len, length)
+        mask = (pos >= start) & (pos < end)
+        cand = jnp.max(jnp.where(mask, y, _NEG), axis=1)  # (BLOCK_B,)
+        out_ref[:, s] = jnp.maximum(out_ref[:, s], cand)
+
+
+def segmax_pallas(y: jax.Array, lengths: jax.Array, k: int, *, interpret: bool = True) -> jax.Array:
+    """Raw pallas_call wrapper: returns (B, k) peaks with -inf for empty
+    segments (callers fill them; see ops.segment_peaks).
+
+    Requires B % BLOCK_B == 0 and T % BLOCK_T == 0 (ops.py pads).
+    """
+    B, T = y.shape
+    assert B % BLOCK_B == 0 and T % BLOCK_T == 0, (B, T)
+    assert 1 <= k <= K_PAD
+    grid = (B // BLOCK_B, T // BLOCK_T)
+    out = pl.pallas_call(
+        functools.partial(_segmax_kernel, k=k, block_t=BLOCK_T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_T), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_B, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, K_PAD), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K_PAD), jnp.float32),
+        interpret=interpret,
+    )(y.astype(jnp.float32), lengths.astype(jnp.int32).reshape(B, 1))
+    return out[:, :k]

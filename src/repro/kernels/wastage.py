@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: GiB*s wastage + first-OOM detection for a batch of
+executions replayed under k-step allocation schedules.
+
+This is the evaluation hot loop (Sec. IV-D): every method x training-fraction
+x retry round rescores whole trace sets.  Semantics match
+``core.allocation.score_attempt_np``: a successful attempt wastes
+``alloc(t) - usage(t)`` over its run; a failed attempt wastes its entire
+allocation up to (and including) the kill sample.
+
+TPU adaptation: the time axis streams through VMEM in (8, 512) tiles; TPU's
+sequential grid order over the T axis lets the kernel carry a per-row
+failed/fail-position state machine in the revisited output block, so the
+prefix sum "allocation until the kill" needs no second pass.  The step
+function alloc(t) is evaluated as v_1 + sum of step increments
+(v_s - v_{s-1}) * [t >= r_{s-1}] — k-1 fused compare+fma passes, no gathers
+(TPU VPUs have no efficient lane gather).
+
+Output columns (finalized by ops.attempt_wastage):
+  0: success-path wastage integral   1: failure-path wastage integral
+  2: first failing sample (or +big)  3: failed flag
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 8
+BLOCK_T = 512
+K_PAD = 128
+
+_BIG = 3.0e38  # plain float: jnp constants would be captured as kernel consts
+
+
+def _wastage_kernel(y_ref, len_ref, bounds_ref, values_ref, out_ref, *, k: int, block_t: int, interval_s: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[:, 2] = jnp.full((out_ref.shape[0],), _BIG, out_ref.dtype)  # first failing sample (min-accumulated)
+
+    y = y_ref[...]  # (BLOCK_B, BLOCK_T) MiB
+    length = len_ref[...]  # (BLOCK_B, 1) int32
+    bounds = bounds_ref[...]  # (BLOCK_B, K_PAD) seconds (padded with +big)
+    values = values_ref[...]  # (BLOCK_B, K_PAD) MiB (edge-padded)
+
+    pos = j * block_t + jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+    valid = pos < length
+    t_mid = (pos.astype(jnp.float32) + 0.5) * interval_s
+
+    # alloc(t) = v_1 + sum_s (v_s - v_{s-1}) * [t > r_{s-1}]  (right-open steps)
+    a = jnp.broadcast_to(values[:, 0:1], y.shape)
+    for s in range(1, k):
+        inc = values[:, s : s + 1] - values[:, s - 1 : s]
+        a = a + inc * (t_mid > bounds[:, s - 1 : s]).astype(jnp.float32)
+
+    over = (y > a) & valid
+    local_fail = jnp.min(jnp.where(over, pos.astype(jnp.float32), _BIG), axis=1)  # (BLOCK_B,)
+
+    prev_failed = out_ref[:, 3] > 0.0
+    # Success-path integral: sum (a - y) over all valid samples.
+    out_ref[:, 0] += jnp.sum(jnp.where(valid, a - y, 0.0), axis=1)
+    # Failure-path integral: allocation up to (and incl.) the first kill; only
+    # blocks before/at the failure block of not-yet-failed rows contribute.
+    upto = jnp.where(pos.astype(jnp.float32) <= local_fail[:, None], 1.0, 0.0)
+    contrib = jnp.sum(jnp.where(valid, a, 0.0) * upto, axis=1)
+    out_ref[:, 1] += jnp.where(prev_failed, 0.0, contrib)
+    # First-failure state machine (grid over T is sequential on TPU).
+    out_ref[:, 2] = jnp.where(prev_failed, out_ref[:, 2], jnp.minimum(out_ref[:, 2], local_fail))
+    out_ref[:, 3] = jnp.maximum(out_ref[:, 3], (local_fail < _BIG).astype(jnp.float32))
+
+
+def wastage_pallas(
+    y: jax.Array,
+    lengths: jax.Array,
+    bounds: jax.Array,
+    values: jax.Array,
+    interval_s: float,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw kernel output (B, 4): [succ_integral, fail_integral, fail_pos, failed].
+
+    Shapes: y (B, T), lengths (B,), bounds/values (B, k).  B % 8 == 0 and
+    T % 512 == 0 required (ops.py pads); bounds padded to K_PAD with +big,
+    values edge-padded (monotone schedules make the padding inert).
+    """
+    B, T = y.shape
+    k = values.shape[-1]
+    assert B % BLOCK_B == 0 and T % BLOCK_T == 0 and 1 <= k <= K_PAD
+    bounds_p = jnp.full((B, K_PAD), _BIG, jnp.float32).at[:, :k].set(bounds.astype(jnp.float32))
+    values_p = jnp.concatenate(
+        [values.astype(jnp.float32), jnp.broadcast_to(values[:, -1:].astype(jnp.float32), (B, K_PAD - k))],
+        axis=1,
+    )
+    out = pl.pallas_call(
+        functools.partial(_wastage_kernel, k=k, block_t=BLOCK_T, interval_s=float(interval_s)),
+        grid=(B // BLOCK_B, T // BLOCK_T),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_T), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_B, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_B, K_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_B, K_PAD), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, K_PAD), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K_PAD), jnp.float32),
+        interpret=interpret,
+    )(
+        y.astype(jnp.float32),
+        lengths.astype(jnp.int32).reshape(B, 1),
+        bounds_p,
+        values_p,
+    )
+    return out[:, :4]

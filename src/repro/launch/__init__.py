@@ -1,0 +1,3 @@
+# Launchers: production mesh construction, the multi-pod dry-run
+# (lower+compile every arch x shape x mesh), roofline derivation, and the
+# train/serve entrypoints.

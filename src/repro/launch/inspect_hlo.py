@@ -1,0 +1,75 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""HLO inspection for perf iterations: lower one cell (cost mode, depth 1)
+and print the top ops by bytes, collectives by op+shape, and reshard copies.
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo --arch llama3.2-3b --shape train_4k --multi-pod
+"""
+
+import argparse
+import collections
+import re
+
+from repro.launch import roofline as RL
+
+
+def analyze(hlo: str, top: int = 25):
+    DT = RL._DTYPE_BYTES
+    sizes = collections.Counter()
+    coll_lines = []
+    for line in hlo.splitlines():
+        m = re.search(r"%[\w.\-]+ = (?:\()?([a-z0-9]+)\[([0-9,]*)\]", line)
+        if not m or m.group(1) not in DT:
+            continue
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes = n * DT[m.group(1)]
+        op = re.search(r"\]\{?[^}]*\}?\s+([a-z0-9\-]+)", line)
+        opname = op.group(1) if op else "?"
+        meta = re.search(r'op_name="([^"]+)"', line)
+        tag = (meta.group(1).split("/")[-1][:40] if meta else "")
+        sizes[f"{opname:22s} {m.group(1)}[{dims}] {tag}"] += nbytes
+        if re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b", line):
+            coll_lines.append((nbytes, line.strip()[:220]))
+    print("== top ops by summed result bytes ==")
+    for k, v in sizes.most_common(top):
+        print(f"{v/2**30:9.3f} GiB  {k}")
+    print("\n== collectives (top 20 by result bytes) ==")
+    for nbytes, line in sorted(coll_lines, reverse=True)[:20]:
+        print(f"{nbytes/2**20:9.1f} MiB  {line}")
+    print(f"\ntotal collective result bytes: {sum(n for n,_ in coll_lines)/2**30:.2f} GiB  ({len(coll_lines)} ops)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--depth", type=int, default=1, help="pattern repetitions")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--production", action="store_true", help="scan lowering instead of cost mode")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import _depth_reduced, lower_cell
+    from repro.configs import get_config
+    from repro.models import flags
+
+    cfg = _depth_reduced(get_config(args.arch), args.depth)
+    if args.production:
+        lowered, *_ = lower_cell(args.arch, args.shape, args.multi_pod, cfg=cfg)
+    else:
+        with flags.cost_mode():
+            lowered, *_ = lower_cell(args.arch, args.shape, args.multi_pod, cfg=cfg)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    print(f"flops/dev={ca.get('flops',0):.3e} bytes/dev={ca.get('bytes accessed',0):.3e}")
+    analyze(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

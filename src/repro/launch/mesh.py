@@ -1,0 +1,54 @@
+"""Production meshes.
+
+Target: TPU v5e pods — 256 chips/pod in a (16, 16) ICI torus; the multi-pod
+config is 2 pods = 512 chips with a leading "pod" (DCN) axis.  Axes:
+
+  pod   — data parallelism across pods (DCN-speed collectives)
+  data  — data parallelism / FSDP shard axis within a pod
+  model — tensor/expert parallelism (ICI-speed collectives)
+
+``make_production_mesh`` is a function (never a module constant) so importing
+this module never touches jax device state; the dry-run forces 512 host
+devices *before* any jax import and everything else sees the real device
+count.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "run under dryrun.py (it forces XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (examples / smoke tests)."""
+    n = len(jax.devices())
+    model = math.gcd(model, n)
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(jax.devices()).reshape(n // model, model), ("data", "model")
+    )
+
+
+# TPU v5e hardware model for the roofline (per chip / per link).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+    "hbm_bytes": 16 * 2**30,  # 16 GiB HBM per chip
+}

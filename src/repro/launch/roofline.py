@@ -1,0 +1,169 @@
+"""Roofline derivation from a compiled dry-run artifact.
+
+Conventions (calibrated against XLA on this jax version — see EXPERIMENTS.md
+SDry-run):
+* ``compiled.cost_analysis()`` reports **per-device** FLOPs / bytes (the SPMD
+  module's shapes are shards), so each term divides by a single chip's peak:
+
+    compute_term    = flops_per_device / peak_flops
+    memory_term     = bytes_per_device / hbm_bw
+    collective_term = collective_bytes_per_device / ici_bw
+
+  which are directly seconds-per-step lower bounds on the target.
+* collective bytes are parsed from the (per-device) HLO: the summed operand
+  sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute op.  Ops whose replica groups only span the "pod" axis
+  cross DCN, not ICI; we report them in the same sum (ICI is the tighter
+  bound, so the term stays conservative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import HW
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+# `%name = <result-type(s)> <collective-op>(operands...), replica_groups=...`
+# (operands are bare %refs in this XLA's text form — only result types are
+# inline, so per-op bytes derive from the result shape + an op-type factor)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<res>\([^)]*\)|[^\s(]+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<kind>-start|-done)?\("
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-type bytes MOVED PER DEVICE, from (per-device) HLO.
+
+    Ring-algorithm traffic per device, with g = replica group size:
+      all-gather:          result * (g-1)/g   (receives all remote shards)
+      all-reduce:          2 * size * (g-1)/g (reduce-scatter + all-gather)
+      reduce-scatter:      input * (g-1)/g = result * (g-1)
+      all-to-all:          size * (g-1)/g
+      collective-permute:  size
+    `-done` halves of async pairs are skipped.
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or m.group("kind") == "-done":
+            continue
+        op = m.group("op")
+        size = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group("res")))
+        gm = _GROUP_RE.search(line)
+        g = int(gm.group(2)) if gm else 2
+        g = max(g, 1)
+        if op == "all-gather":
+            moved = size * (g - 1) / g
+        elif op == "all-reduce":
+            moved = 2 * size * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = size * (g - 1)
+        elif op == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = size
+        out[op] += int(moved)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_by_type: dict[str, int]
+    model_flops_global: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / HW["peak_flops_bf16"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / HW["ici_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Step-time lower bound (no overlap assumption: max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat recompute, masked-attention waste, dispatch overhead)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the score: fraction
+        of peak the step would achieve if it ran at the dominant term)."""
+        t = self.bound_s
+        return self.model_flops_global / (self.chips * HW["peak_flops_bf16"] * t) if t else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape, accounted_tokens: int | None = None) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (N = active params)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def derive(compiled, hlo_text: str, cfg, shape, chips: int) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(sum(coll.values())),
+        collective_by_type=coll,
+        model_flops_global=model_flops(cfg, shape),
+        chips=chips,
+    )

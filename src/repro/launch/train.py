@@ -1,0 +1,74 @@
+"""Training launcher.
+
+On a real TPU fleet each host runs this entrypoint under its resource
+manager; ``jax.distributed.initialize()`` picks up the coordinator from the
+environment, the production mesh comes from ``mesh.make_production_mesh``,
+and the per-arch shardings from ``distributed.sharding``.  The same driver
+runs single-host (this container) on the reduced config for end-to-end
+validation — same Trainer, same checkpoint/recovery/monitoring stack.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --steps 60
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-235b-a22b --steps 20 --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (full configs need the TPU fleet; see dryrun.py)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host fleet)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+
+        jax.distributed.initialize()
+
+    from repro.configs import get_config
+    from repro.data import DataConfig
+    from repro.distributed.fault_tolerance import run_with_recovery
+    from repro.train import OptimizerConfig, TrainConfig, Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len, global_batch=args.global_batch)
+    tc = TrainerConfig(
+        steps=args.steps,
+        checkpoint_every=max(args.steps // 3, 10),
+        checkpoint_dir=args.ckpt or f"/tmp/repro_{cfg.name}",
+        log_every=max(args.steps // 10, 1),
+    )
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps)
+    fails = [args.fail_at] if args.fail_at else []
+    trainers = []
+
+    def make_trainer():
+        t = Trainer(cfg, data_cfg, TrainConfig(accum_steps=args.accum, optimizer=opt), tc,
+                    fail_at_step=fails.pop(0) if fails else None)
+        trainers.append(t)
+        return t
+
+    state, restarts = run_with_recovery(make_trainer)
+    print(f"done: step {int(np.asarray(state['step']))}, {restarts} restart(s)")
+    for m in trainers[-1].metrics_log[-5:]:
+        print(f"  step {m['step']:5d} loss {m['loss']:.4f} ({m['time_s']*1e3:.0f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# Model zoo: pattern-grouped scan-stacked transformers (dense / MoE / VLM /
+# audio-encoder) plus RWKV-6 and RG-LRU recurrent mixers.
+from repro.models.model import decode_step, forward, init_cache, init_params
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params"]

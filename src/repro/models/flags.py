@@ -1,0 +1,38 @@
+"""Process-global lowering flags.
+
+COST_MODE: when True, every ``lax.scan`` in the model unrolls fully.  XLA's
+cost analysis counts a while-loop body ONCE regardless of trip count, so the
+roofline measurement (launch/roofline.measure) lowers a depth-reduced,
+fully-unrolled variant of each cell and extrapolates — while the production
+dry-run keeps the scans (O(1) HLO size, honest compile + memory analysis).
+"""
+
+COST_MODE = False
+
+# In cost mode, inner chunk scans (flash KV chunks, RWKV time chunks) unroll
+# to at most this many bodies; the dry-run extrapolates the chunk axis
+# linearly (costs are multilinear in every trip count).  Keeps the unrolled
+# HLO compile-able for the 512-chunk rwkv prefill cells.
+COST_CHUNK_CAP = 32
+
+
+class cost_mode:
+    """Context manager enabling fully-unrolled lowering."""
+
+    def __enter__(self):
+        global COST_MODE
+        self._prev = COST_MODE
+        COST_MODE = True
+        return self
+
+    def __exit__(self, *exc):
+        global COST_MODE
+        COST_MODE = self._prev
+
+
+# Use the Pallas flash-attention kernel (kernels/flash.py) inside
+# models/layers.flash_attention.  Only meaningful on a real TPU backend —
+# interpret mode is for validation; the dry-run keeps the XLA path so the
+# compiled artifact stays CPU-lowerable (SPerf accounts the kernel's HBM
+# traffic analytically, see EXPERIMENTS.md).
+USE_FLASH_KERNEL = False

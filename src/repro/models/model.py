@@ -1,0 +1,360 @@
+"""Model assembly: pattern-grouped, scan-stacked decoder/encoder.
+
+Layers are grouped by the config's ``block_pattern``: ``num_layers //
+len(pattern)`` repetitions are *stacked* (params get a leading repetition
+axis) and executed with ``lax.scan`` — HLO size and compile time stay O(1) in
+depth, which is what makes the 88-95-layer assigned configs lowerable.
+Remainder layers (num_layers % len(pattern)) run unrolled after the scan.
+
+Three entry points share one layer implementation:
+  * ``forward``       — train/prefill over T tokens (optionally returns the
+                        decode cache built from the prefill pass),
+  * ``decode_step``   — one token per sequence against the cache,
+  * ``init_cache``    — cache/state skeleton (works under ``jax.eval_shape``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+ATTN_KINDS = ("dense", "local", "global", "moe")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply / cache
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 2)
+    D = cfg.d_model
+    if kind in ATTN_KINDS:
+        p = {"ln1": L.init_rmsnorm(D), "attn": L.init_attention(ks[0], cfg), "ln2": L.init_rmsnorm(D)}
+        if cfg.use_post_norm:
+            p["ln1_post"] = L.init_rmsnorm(D)
+            p["ln2_post"] = L.init_rmsnorm(D)
+        if kind == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    if kind == "rwkv":
+        return {
+            "ln1": L.init_rmsnorm(D),
+            "tm": R.init_rwkv_time_mix(ks[0], cfg),
+            "ln2": L.init_rmsnorm(D),
+            "cm": R.init_rwkv_channel_mix(ks[1], cfg),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": L.init_rmsnorm(D),
+            "rec": R.init_rglru_block(ks[0], cfg),
+            "ln2": L.init_rmsnorm(D),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ATTN_KINDS:
+        return L.build_cache(cfg, batch, max_len, local=(kind == "local"))
+    if kind == "rwkv":
+        return R.init_rwkv_state(cfg, batch)
+    if kind == "rglru":
+        return R.init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_layer(p, x, kind: str, cfg: ModelConfig, positions, mrope_positions, cache, *, want_cache: bool, cache_len: int | None = None):
+    """Returns (x, new_cache, aux).  ``cache=None`` + ``want_cache`` -> build
+    one from this (prefill) pass."""
+    aux = jnp.zeros((), jnp.float32)
+    # layer-boundary activation constraint: batch over data axes; with
+    # seq_shard also T over "model" (gathered again inside attention)
+    seq_spec = ("model",) if (cfg.seq_shard and cfg.parallelism == "tp" and x.shape[1] > 1) else ()
+    x = L.constrain_act(cfg, x, *seq_spec)
+    if kind in ATTN_KINDS:
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        if seq_spec:
+            h = L.constrain_act(cfg, h)  # gather the sequence for attention
+        decode = cache is not None and x.shape[1] == 1
+        if decode:
+            attn_out, new_cache = L.attention(
+                p["attn"], h, positions, cfg, local=(kind == "local"), cache=cache, mrope_positions=mrope_positions
+            )
+        else:
+            attn_out, kv = _attention_with_kv(p["attn"], h, positions, cfg, kind, mrope_positions)
+            new_cache = None
+            if want_cache:
+                new_cache = L.cache_from_prefill(
+                    cfg, kv[0], kv[1], jnp.broadcast_to(positions, h.shape[:2]),
+                    local=(kind == "local"), max_len=cache_len,
+                )
+        if cfg.use_post_norm:
+            attn_out = L.rms_norm(p["ln1_post"], attn_out, cfg.norm_eps)
+        x = x + attn_out
+        h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            ff, aux = L.moe(p["moe"], h, cfg)
+        else:
+            ff = L.mlp(p["mlp"], h, cfg.mlp_activation, cfg)
+        if cfg.use_post_norm:
+            ff = L.rms_norm(p["ln2_post"], ff, cfg.norm_eps)
+        return x + ff, new_cache, aux
+
+    if kind == "rwkv":
+        state = cache if cache is not None else R.init_rwkv_state(cfg, x.shape[0])
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        tm_out, tm_state = R.rwkv_time_mix(p["tm"], h, cfg, {"shift": state["shift"], "wkv": state["wkv"]})
+        x = x + tm_out
+        h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        cm_out, cm_shift = R.rwkv_channel_mix(p["cm"], h, cfg, state["cm_shift"])
+        new_state = {"shift": tm_state["shift"], "wkv": tm_state["wkv"], "cm_shift": cm_shift}
+        return x + cm_out, (new_state if (want_cache or cache is not None) else None), aux
+
+    if kind == "rglru":
+        state = cache if cache is not None else R.init_rglru_state(cfg, x.shape[0])
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        rec_out, new_state = R.rglru_block(p["rec"], h, cfg, state)
+        x = x + rec_out
+        h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h, cfg.mlp_activation, cfg), (
+            new_state if (want_cache or cache is not None) else None
+        ), aux
+    raise ValueError(kind)
+
+
+def _attention_with_kv(p, h, positions, cfg, kind, mrope_positions):
+    """Train/prefill attention that also exposes the rotated k/v for cache
+    construction (kept here so layers.attention stays cache-agnostic)."""
+    B, T, _ = h.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    head_spec = ("model",) if cfg.parallelism == "tp" else ()
+    q = (h @ p["wq"]).reshape(B, T, H, hd)
+    k = (h @ p["wk"]).reshape(B, T, KV, hd)
+    v = (h @ p["wv"]).reshape(B, T, KV, hd)
+    q = L.constrain_act(cfg, q, None, *head_spec, None)
+    if cfg.qk_norm:
+        q = L.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rms_norm(p["k_norm"], k, cfg.norm_eps)
+    sections = cfg.mrope_sections
+    rope_pos = mrope_positions if sections is not None else positions
+    q = L.apply_rope(q, rope_pos, cfg.rope_theta, sections)
+    k = L.apply_rope(k, rope_pos, cfg.rope_theta, sections)
+    out = L.flash_attention(
+        q,
+        k,
+        v,
+        jnp.broadcast_to(positions, (B, T)),
+        jnp.broadcast_to(positions, (B, T)),
+        causal=not cfg.is_encoder,
+        window=cfg.window_size if kind == "local" else None,
+        softcap=cfg.attn_softcap,
+        cfg=cfg,
+    )
+    return out.reshape(B, T, H * hd) @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params / cache
+# ---------------------------------------------------------------------------
+
+
+def _pattern_split(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_rep repetitions of the pattern, n_tail remainder layers)."""
+    plen = len(cfg.block_pattern)
+    return cfg.num_layers // plen, cfg.num_layers % plen
+
+
+def init_params(key, cfg: ModelConfig):
+    n_rep, n_tail = _pattern_split(cfg)
+    keys = jax.random.split(key, 4)
+    dt = L.cdtype(cfg)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: dict = {}
+    if cfg.frontend == "audio_frames":
+        params["frontend_proj"] = (
+            jax.random.normal(keys[0], (cfg.frontend_dim, D)) * cfg.frontend_dim**-0.5
+        ).astype(dt)
+    params["embed"] = (jax.random.normal(keys[1], (V, D)) * D**-0.5).astype(dt)
+    blocks = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        init_one = functools.partial(init_layer, cfg=cfg, kind=kind)
+        blocks[str(i)] = jax.vmap(init_one)(jax.random.split(jax.random.fold_in(keys[2], i), n_rep))
+    params["blocks"] = blocks
+    kinds = cfg.layer_kinds
+    params["tail"] = {
+        str(i): init_layer(jax.random.fold_in(keys[3], i), cfg, kinds[n_rep * len(cfg.block_pattern) + i])
+        for i in range(n_tail)
+    }
+    params["final_norm"] = L.init_rmsnorm(D)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[0], (D, V)) * D**-0.5).astype(dt)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache skeleton matching the params' block/tail structure."""
+    n_rep, n_tail = _pattern_split(cfg)
+    pattern = cfg.block_pattern
+    one_rep = {str(i): init_layer_cache(cfg, kind, batch, max_len) for i, kind in enumerate(pattern)}
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_rep, *a.shape)).copy(), one_rep)
+    kinds = cfg.layer_kinds
+    tail = {
+        str(i): init_layer_cache(cfg, kinds[n_rep * len(pattern) + i], batch, max_len) for i in range(n_tail)
+    }
+    return {"blocks": stacked, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, features, patch_embeds):
+    if cfg.frontend == "audio_frames":
+        x = features.astype(L.cdtype(cfg)) @ params["frontend_proj"]
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        if patch_embeds is not None:
+            P = patch_embeds.shape[1]
+            x = x.at[:, :P, :].add(patch_embeds.astype(x.dtype))
+    return L.constrain_act(cfg, x)
+
+
+def _head(params, cfg: ModelConfig, x):
+    x = L.constrain_act(cfg, x)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ w).astype(jnp.float32)
+    logits = L.constrain_logits(cfg, logits)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _run_blocks(params, cfg: ModelConfig, x, positions, mrope_positions, caches, want_cache: bool, cache_len: int | None = None):
+    """Scan over stacked pattern repetitions, then the unrolled tail."""
+    pattern = cfg.block_pattern
+    n_rep, n_tail = _pattern_split(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def rep_body(x, block_params, block_caches):
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            c = None if block_caches is None else block_caches[str(i)]
+            x, nc, aux = apply_layer(
+                block_params[str(i)],
+                x=x,
+                kind=kind,
+                cfg=cfg,
+                positions=positions,
+                mrope_positions=mrope_positions,
+                cache=c,
+                want_cache=want_cache,
+                cache_len=cache_len,
+            )
+            if nc is not None:
+                new_caches[str(i)] = nc
+            aux_sum += aux
+        return x, new_caches, aux_sum
+
+    body = rep_body
+    if cfg.remat:
+        body = jax.checkpoint(rep_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if caches is None and not want_cache:
+
+        def scan_fn(carry, bp):
+            x, aux = carry
+            x, _, aux_i = body(x, bp, None)
+            return (x, aux + aux_i), None
+
+        from repro.models import flags
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_fn, (x, aux_total), params["blocks"], unroll=n_rep if flags.COST_MODE else 1
+        )
+        new_block_caches = None
+    else:
+
+        def scan_fn(carry, xs):
+            x, aux = carry
+            bp, bc = xs
+            x, nc, aux_i = body(x, bp, bc)
+            return (x, aux + aux_i), nc
+
+        from repro.models import flags
+
+        (x, aux_total), new_block_caches = jax.lax.scan(
+            scan_fn,
+            (x, aux_total),
+            (params["blocks"], caches["blocks"] if caches else None),
+            unroll=n_rep if flags.COST_MODE else 1,
+        )
+
+    kinds = cfg.layer_kinds
+    new_tail = {}
+    for i in range(n_tail):
+        kind = kinds[n_rep * len(pattern) + i]
+        c = None if caches is None else caches["tail"][str(i)]
+        x, nc, aux = apply_layer(
+            params["tail"][str(i)], x, kind, cfg,
+            positions=positions, mrope_positions=mrope_positions, cache=c,
+            want_cache=want_cache, cache_len=cache_len,
+        )
+        if nc is not None:
+            new_tail[str(i)] = nc
+        aux_total += aux
+
+    new_caches = None
+    if new_block_caches is not None or new_tail:
+        new_caches = {"blocks": new_block_caches, "tail": new_tail}
+    return x, new_caches, aux_total
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens=None,
+    *,
+    features=None,
+    patch_embeds=None,
+    mrope_positions=None,
+    want_cache: bool = False,
+    cache_len: int | None = None,
+):
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits, cache_or_None, aux_loss).  ``cache_len`` sizes the decode
+    cache built by a prefill pass (>= T + tokens still to decode)."""
+    x = _embed_inputs(params, cfg, tokens, features, patch_embeds)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, caches, aux = _run_blocks(
+        params, cfg, x, positions, mrope_positions, caches=None,
+        want_cache=want_cache, cache_len=cache_len,
+    )
+    return _head(params, cfg, x), caches, aux
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, positions, *, mrope_positions=None):
+    """One decode step.  tokens: (B, 1); positions: (B,) current position.
+
+    Returns (logits (B, 1, V), new_cache)."""
+    assert cfg.has_decode
+    x = _embed_inputs(params, cfg, tokens, None, None)
+    x, new_caches, _ = _run_blocks(
+        params, cfg, x, positions, mrope_positions, caches=cache, want_cache=False
+    )
+    return _head(params, cfg, x), new_caches

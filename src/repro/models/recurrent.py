@@ -1,0 +1,235 @@
+"""Recurrent sequence mixers: RWKV-6 ("Finch") and RG-LRU (Griffin /
+RecurrentGemma).
+
+TPU adaptation (see DESIGN.md): the reference CUDA kernels for RWKV are
+token-recurrent; on TPU we use the *chunked* linear-attention form — within a
+chunk of L=64 tokens the pairwise-decay attention matrix factors into two
+MXU matmuls, across chunks a (head_dim x head_dim) state is carried by
+``lax.scan``.  Stability: per-step log-decay is clamped to >= -1.2 so the
+worst within-chunk cumulative decay exp(+-76.8) stays inside f32 range — the
+factored form needs exp(-c_tau) explicitly.  RWKV decays live near 1.0, so
+the clamp only accelerates already-fast-forgetting channels (documented
+deviation from the CUDA kernel).
+
+RG-LRU is an elementwise affine recurrence h_t = a_t*h_{t-1} + b_t and maps
+directly onto ``jax.lax.associative_scan``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, init_rmsnorm, rms_norm
+
+RWKV_CHUNK = 64
+LOGW_MIN = -1.2  # f32-safety clamp for the factored chunk form
+LOGW_MAX = -1e-6
+LORA_RANK = 32
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H, hd = rwkv_heads(cfg)
+    ks = jax.random.split(key, 8)
+    dt = cdtype(cfg)
+    s = D**-0.5
+    return {
+        "mu": jnp.zeros((5, D), jnp.float32),  # token-shift lerp for r,k,v,g,w
+        "wr": (jax.random.normal(ks[0], (D, D)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, D)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, D)) * s).astype(dt),
+        "wg": (jax.random.normal(ks[3], (D, D)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[4], (D, D)) * s).astype(dt),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((D,), -1.0, jnp.float32),
+        "wa": (jax.random.normal(ks[5], (D, LORA_RANK)) * s).astype(jnp.float32),
+        "wb": (jax.random.normal(ks[6], (LORA_RANK, D)) * LORA_RANK**-0.5).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),  # bonus
+        "out_norm": init_rmsnorm(D),
+    }
+
+
+def rwkv_heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = 64  # RWKV-6 head size
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def _token_shift(x, mu, shift_state):
+    """xm_i = x + (shift(x) - x) * mu_i for the 5 mix targets."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return x[None] + (prev - x)[None] * mu[:, None, None, :].astype(x.dtype)  # (5, B, T, D)
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state):
+    """x: (B, T, D).  state: {"shift": (B, D), "wkv": (B, H, hd, hd)}.
+    Returns (out, new_state).  T must be 1 (decode) or is chunk-padded."""
+    B, T, D = x.shape
+    H, hd = rwkv_heads(cfg)
+    xm = _token_shift(x, p["mu"], state["shift"])
+    r = (xm[0] @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xm[1] @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xm[2] @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xm[3] @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xm[4].astype(jnp.float32) @ p["wa"]) @ p["wb"])
+    logw = jnp.clip(logw, LOGW_MIN, LOGW_MAX).reshape(B, T, H, hd)
+    u = p["u"]
+
+    S0 = state["wkv"].astype(jnp.float32)  # (B, H, hd_k, hd_v)
+
+    if T == 1:
+        # token recurrence: o = r . (u*k v^T + S);  S' = w*S + k v^T
+        rt, kt, vt, wt = r[:, 0], k[:, 0], v[:, 0], jnp.exp(logw[:, 0])
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt * u[None], kv) + jnp.einsum("bhk,bhkv->bhv", rt, S0)
+        S = wt[..., None] * S0 + kv
+        o = o[:, None]  # (B, 1, H, hd)
+    else:
+        L = RWKV_CHUNK
+        pad = (-T) % L
+        if pad:
+            r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (r, k, v))
+            # pad decay with 0 (= keep): padded steps must not decay the
+            # carried state (k=0 already keeps them out of the kv sums)
+            logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=0.0)
+        n = (T + pad) // L
+        rc, kc, vc, wc = (a.reshape(B, n, L, H, hd).transpose(1, 0, 3, 2, 4) for a in (r, k, v, logw))
+
+        def chunk_step(S, inp):
+            rr, kk, vv, lw = inp  # (B, H, L, hd)
+            c = jnp.cumsum(lw, axis=2)  # inclusive log-decay
+            c_prev = c - lw  # exclusive: decay up to t-1
+            q_f = rr * jnp.exp(c_prev)  # bounded <= |r|
+            k_f = kk * jnp.exp(-c)  # bounded by clamp
+            A = jnp.einsum("bhtd,bhsd->bhts", q_f, k_f)
+            mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+            A = jnp.where(mask[None, None], A, 0.0)
+            o = jnp.einsum("bhts,bhsd->bhtd", A, vv)
+            o += jnp.einsum("bhtd,bhtd->bht", rr * u[None, :, None, :], kk)[..., None] * vv
+            o += jnp.einsum("bhtk,bhkv->bhtv", q_f, S)
+            c_last = c[:, :, -1:, :]
+            S_new = jnp.exp(c_last[:, :, 0])[..., None] * S + jnp.einsum(
+                "bhtk,bhtv->bhkv", kk * jnp.exp(c_last - c), vv
+            )
+            return S_new, o
+
+        from repro.models import flags
+
+        unroll_n = min(n, flags.COST_CHUNK_CAP) if flags.COST_MODE else 1
+        S, o = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc), unroll=unroll_n)
+        o = o.transpose(1, 0, 3, 2, 4).reshape(B, n * L, H, hd)[:, :T]
+
+    o = rms_norm(p["out_norm"], o.reshape(B, T, D).astype(x.dtype), cfg.norm_eps)
+    out = (o * g) @ p["wo"]
+    new_state = {"shift": x[:, -1, :], "wkv": S.astype(state["wkv"].dtype)}
+    return out, new_state
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cdtype(cfg)
+    return {
+        "mu": jnp.zeros((2, D), jnp.float32),
+        "wk": (jax.random.normal(k1, (D, F)) * D**-0.5).astype(dt),
+        "wv": (jax.random.normal(k2, (F, D)) * F**-0.5).astype(dt),
+        "wr": (jax.random.normal(k3, (D, D)) * D**-0.5).astype(dt),
+    }
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, shift_state):
+    B, T, D = x.shape
+    xm = _token_shift(x, p["mu"], shift_state)  # (2, B, T, D)
+    k = jnp.square(jax.nn.relu(xm[0] @ p["wk"]))
+    out = jax.nn.sigmoid(xm[1] @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    H, hd = rwkv_heads(cfg)
+    return {
+        "shift": jnp.zeros((batch, cfg.d_model), cdtype(cfg)),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), cdtype(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    D = cfg.d_model
+    R = cfg.rnn_width or D
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    dt = cdtype(cfg)
+    return {
+        "w_branch": (jax.random.normal(ks[0], (D, R)) * D**-0.5).astype(dt),  # gate branch
+        "w_rnn": (jax.random.normal(ks[1], (D, R)) * D**-0.5).astype(dt),  # rnn branch
+        "conv_w": (jax.random.normal(ks[2], (cw, R)) * cw**-0.5).astype(dt),
+        "conv_b": jnp.zeros((R,), jnp.float32),
+        "w_r": (jax.random.normal(ks[3], (R, R)) * R**-0.5).astype(dt),  # recurrence gate
+        "w_i": (jax.random.normal(ks[4], (R, R)) * R**-0.5).astype(dt),  # input gate
+        "lam": jnp.full((R,), 4.0, jnp.float32),  # a = sigmoid(lam)^(c*r)
+        "w_out": (jax.random.normal(ks[5], (R, D)) * R**-0.5).astype(dt),
+    }
+
+
+def _causal_conv(x, w, b, buf):
+    """Depthwise causal conv1d.  x: (B,T,R); buf: (B, cw-1, R) carried history."""
+    cw = w.shape[0]
+    ext = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    out = sum(ext[:, i : i + x.shape[1], :] * w[i] for i in range(cw)) + b.astype(x.dtype)
+    return out, ext[:, -(cw - 1) :, :]
+
+
+def rglru_block(p, x, cfg: ModelConfig, state):
+    """Griffin recurrent block.  state: {"h": (B,R) f32, "conv": (B,cw-1,R)}."""
+    B, T, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_branch"])
+    u, conv_state = _causal_conv(x @ p["w_rnn"], p["conv_w"], p["conv_b"], state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,T,R), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    if T == 1:
+        h_last = a[:, 0] * state["h"] + b[:, 0]
+        h_seq = h_last[:, None]
+    else:
+        # affine scan h_t = a_t h_{t-1} + b_t with h_0 from state
+        a0 = jnp.concatenate([jnp.ones((B, 1, a.shape[-1]), a.dtype), a], axis=1)
+        b0 = jnp.concatenate([state["h"][:, None, :], b], axis=1)
+
+        def combine(x, y):
+            a1, u1 = x
+            a2, u2 = y
+            return a1 * a2, a2 * u1 + u2
+
+        _, h_all = jax.lax.associative_scan(combine, (a0, b0), axis=1)
+        h_seq, h_last = h_all[:, 1:], h_all[:, -1]
+
+    out = (h_seq.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    R = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, R), cdtype(cfg)),
+    }

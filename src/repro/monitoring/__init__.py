@@ -1,0 +1,7 @@
+# Time-series monitoring substrate (paper Fig. 6): an Influx-like in-memory
+# store plus a /proc-based RSS collector so the predictor can monitor *real*
+# local processes (the paper's Docker/cgroup path) as well as simulated ones.
+from repro.monitoring.store import SeriesPoint, TimeSeriesStore
+from repro.monitoring.collector import MemoryMonitor, sample_rss_mib
+
+__all__ = ["SeriesPoint", "TimeSeriesStore", "MemoryMonitor", "sample_rss_mib"]

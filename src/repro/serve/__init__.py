@@ -1,0 +1,7 @@
+# Serving substrate: prefill/decode step builders over sharded KV caches,
+# a continuous-batching engine, and the beyond-paper application of the
+# k-Segments predictor: segment-wise HBM admission control.
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.serve.admission import AdmissionController, RequestPlan
+
+__all__ = ["make_decode_step", "make_prefill_step", "AdmissionController", "RequestPlan"]

@@ -1,0 +1,78 @@
+"""Serving steps: prefill (build cache) and decode (one token vs cache).
+
+``serve_step`` in the dry-run is the decode step: for shape cells
+``decode_32k`` / ``long_500k`` it lowers with a ShapeDtypeStruct cache of
+seq_len slots (ragged per-request positions), exactly what a production
+engine holds between steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import decode_step, forward, init_cache
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    """(params, inputs dict) -> (last-token logits, cache sized cache_len).
+
+    ``inputs`` is the input_specs() dict (tokens / features / patch_embeds /
+    mrope_positions as the arch requires) — dict-shaped so jit in_shardings
+    bind by NAME, never by position."""
+
+    def prefill(params, inputs):
+        logits, cache, _ = forward(
+            params,
+            cfg,
+            inputs.get("tokens"),
+            features=inputs.get("features"),
+            patch_embeds=inputs.get("patch_embeds"),
+            mrope_positions=inputs.get("mrope_positions"),
+            want_cache=cfg.has_decode,
+            cache_len=cache_len,
+        )
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, inputs dict) -> (logits (B,V), cache).  ``inputs``
+    holds tokens (B,1), positions (B,), and mrope_positions for VLMs."""
+
+    def step(params, cache, inputs):
+        logits, new_cache = decode_step(
+            params,
+            cfg,
+            cache,
+            inputs["tokens"],
+            inputs["positions"],
+            mrope_positions=inputs.get("mrope_positions"),
+        )
+        return logits[:, 0], new_cache
+
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, tokens, steps: int, cache_len: int | None = None):
+    """Reference generation loop for examples/tests (prefill + greedy decode)."""
+    B, T = tokens.shape
+    cache_len = cache_len or (T + steps)
+    prefill = make_prefill_step(cfg, cache_len)
+    step = make_decode_step(cfg)
+    logits, cache = prefill(params, {"tokens": tokens})
+    out = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+    for i in range(steps - 1):
+        pos = jnp.full((B,), T + i, jnp.int32)
+        logits, cache = step(params, cache, {"tokens": out[-1][:, None], "positions": pos})
+        out.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)  # (B, steps)

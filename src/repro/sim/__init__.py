@@ -1,0 +1,20 @@
+# Workflow/cluster simulation substrate: synthetic nf-core-like traces
+# (calibrated to the paper's eager/sarek statistics), the online learning
+# simulator reproducing the paper's evaluation protocol, and a fast
+# lax.scan-based batch simulator.
+from repro.sim.traces import Execution, TaskTrace, WorkflowTrace, generate_eager, generate_sarek, generate_suite
+from repro.sim.simulator import SimConfig, TaskResult, run_execution, simulate_suite, simulate_task
+
+__all__ = [
+    "Execution",
+    "TaskTrace",
+    "WorkflowTrace",
+    "generate_eager",
+    "generate_sarek",
+    "generate_suite",
+    "SimConfig",
+    "TaskResult",
+    "run_execution",
+    "simulate_suite",
+    "simulate_task",
+]

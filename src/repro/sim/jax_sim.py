@@ -1,0 +1,141 @@
+"""Fully-JAX online simulator: the paper's whole evaluation loop as one
+``lax.scan``.
+
+The sequential Python simulator (simulator.py) is the reference; this version
+expresses the *online recurrence* natively: the scan carry is exactly the
+k-Segments sufficient-statistic state (KSegmentsModel.state()), each scan step
+is one task execution — predict, replay-with-retries (a bounded
+``lax.while_loop``), observe — and the whole test stream evaluates in one jit.
+Offsets use the O(1) "progressive" error mode (the insample mode needs O(n)
+history, which a scan carry cannot hold); the cross-check test runs the
+Python model in the same mode.
+
+On corpus-scale batches this is the throughput path (one device dispatch per
+task type instead of one per execution), and its inner reductions are the
+same computations the Pallas kernels implement for TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regression
+from repro.core.segmentation import segment_bounds, segment_peaks
+
+MIB_PER_GIB = 1024.0
+MAX_RETRIES = 64
+
+
+def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, interval_s: float, floor_mib: float):
+    """jnp twin of KSegmentsModel.predict (progressive offsets)."""
+    r_e = regression.predict(rt_stats, u) - jnp.maximum(rt_over, 0.0)
+    r_e = jnp.maximum(r_e, interval_s)
+    bounds = jnp.arange(1, k + 1, dtype=jnp.float32) * (r_e / k)
+    v = regression.predict(seg_stats, u) + jnp.maximum(seg_under, 0.0)
+    v = v.at[0].set(jnp.where(v[0] < 0, floor_mib, v[0]))
+    v = jax.lax.associative_scan(jnp.maximum, v)
+    return bounds, jnp.maximum(v, floor_mib)
+
+
+def _attempt(y, length, interval_s, bounds, values):
+    """Single-row attempt scorer (same semantics as core.allocation)."""
+    T = y.shape[0]
+    t = (jnp.arange(T, dtype=jnp.float32) + 0.5) * interval_s
+    idx = jnp.minimum(jnp.sum(t[:, None] > bounds[None, :], axis=1), len(values) - 1)
+    a = values[idx]
+    valid = jnp.arange(T) < length
+    over = (y > a) & valid
+    failed = jnp.any(over)
+    fail_idx = jnp.where(failed, jnp.argmax(over), T + 1)
+    pos = jnp.arange(T)
+    succ_w = jnp.sum(jnp.where(valid, a - y, 0.0))
+    fail_w = jnp.sum(jnp.where((pos <= fail_idx) & valid, a, 0.0))
+    waste = jnp.where(failed, fail_w, succ_w) * interval_s / MIB_PER_GIB
+    return failed, fail_idx, waste
+
+
+def _replay(y, length, bounds, values, *, interval_s, selective: bool, factor: float, cap_mib: float):
+    """Retry loop: returns (total wastage, retries, final values)."""
+
+    def cond(c):
+        done, retries, *_ = c
+        return (~done) & (retries <= MAX_RETRIES)
+
+    def body(c):
+        done, retries, waste, vals = c
+        failed, fail_idx, w = _attempt(y, length, interval_s, bounds, vals)
+        waste = waste + w
+        t_fail = (fail_idx.astype(jnp.float32) + 0.5) * interval_s
+        seg = jnp.minimum(jnp.sum(t_fail > bounds), len(vals) - 1)
+        if selective:
+            new_vals = vals.at[seg].multiply(factor)
+        else:
+            new_vals = jnp.where(jnp.arange(len(vals)) >= seg, vals * factor, vals)
+        new_vals = jnp.minimum(jax.lax.associative_scan(jnp.maximum, new_vals), cap_mib)
+        return (~failed, retries + jnp.where(failed, 1, 0), waste, jnp.where(failed, new_vals, vals))
+
+    done, retries, waste, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(False), jnp.asarray(0), jnp.asarray(0.0, jnp.float32), jnp.minimum(values, cap_mib))
+    )
+    return waste, retries
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interval_s", "selective", "factor", "floor_mib", "cap_mib", "n_train"))
+def simulate_task_scan(
+    x,
+    y,
+    lengths,
+    *,
+    k: int = 4,
+    interval_s: float = 2.0,
+    selective: bool = True,
+    factor: float = 2.0,
+    floor_mib: float = 100.0,
+    cap_mib: float = 128 * 1024.0,
+    n_train: int = 0,
+):
+    """Online k-Segments over one task type's padded executions.
+
+    Args: x (B,) input sizes, y (B, T) padded MiB series, lengths (B,).
+    Returns (wastage (B,), retries (B,)) — zeros for the training prefix.
+    """
+    B, T = y.shape
+    u = (x - x[0]).astype(jnp.float32)  # conditioning shift (see regression.py)
+    peaks_all = segment_peaks(y, lengths, k)  # (B, k) — the segmax kernel's job
+    bounds_s, ends_s = segment_bounds(lengths, k)
+
+    def step(carry, inp):
+        rt_stats, rt_over, seg_stats, seg_under, i = carry
+        ui, yi, li, peaks_i = inp
+
+        can_predict = i >= max(n_train, 1)
+        bounds, values = _predict(rt_stats, rt_over, seg_stats, seg_under, ui, k, interval_s, floor_mib)
+        waste, retries = _replay(
+            yi, li, bounds, values, interval_s=interval_s, selective=selective, factor=factor, cap_mib=cap_mib
+        )
+        waste = jnp.where(can_predict, waste, 0.0)
+        retries = jnp.where(can_predict, retries, 0)
+
+        # observe (progressive offsets: score-then-update)
+        runtime = li.astype(jnp.float32) * interval_s
+        has_data = rt_stats[regression.N] > 0
+        rt_pred = regression.predict(rt_stats, ui)
+        rt_over = jnp.where(has_data, jnp.maximum(rt_over, rt_pred - runtime), rt_over)
+        seg_pred = regression.predict(seg_stats, ui)
+        seg_under = jnp.where(has_data, jnp.maximum(seg_under, peaks_i - seg_pred), seg_under)
+        rt_stats = regression.update_stats(rt_stats, ui, runtime)
+        seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
+        return (rt_stats, rt_over, seg_stats, seg_under, i + 1), (waste, retries)
+
+    init = (
+        regression.empty_stats(),
+        jnp.asarray(0.0, jnp.float32),
+        regression.empty_stats(k),
+        jnp.zeros((k,), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    _, (waste, retries) = jax.lax.scan(step, init, (u, y.astype(jnp.float32), lengths.astype(jnp.int32), peaks_all))
+    return waste, retries

@@ -1,0 +1,164 @@
+"""Online simulation reproducing the paper's evaluation protocol (Sec. IV-B).
+
+For each (task type, method, training fraction):
+
+1. The first ``frac * n`` executions are *historical*: they ran under the
+   workflow defaults, and the method observes them (this is how monitoring
+   data accumulates in a real deployment).
+2. Every remaining execution is *simulated*: the method predicts an
+   allocation, the execution replays against it, OOM kills trigger the
+   method's retry strategy until success, and the finished execution is
+   folded back into the online model.
+
+Reported per task: mean wastage (GiB*s) and mean retries per test execution —
+the quantities of Fig. 7a/7c; Fig. 7b's "lowest wastage counts" derive from
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.allocation import StepAllocation, score_attempt_np
+from repro.core.ksegments import KSegmentsConfig
+from repro.core.predictor import AllocationMethod, make_method
+from repro.sim.traces import TaskTrace, WorkflowTrace
+
+
+@dataclasses.dataclass
+class SimConfig:
+    node_cap_mib: float = 128 * 1024.0  # the paper's 128 GB evaluation machine
+    max_retries: int = 64
+    min_executions: int = 20  # eligibility threshold for evaluation
+    ksegments: KSegmentsConfig = dataclasses.field(default_factory=KSegmentsConfig)
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task: str
+    workflow: str
+    method: str
+    train_frac: float
+    n_train: int
+    n_test: int
+    wastage_gib_s: np.ndarray  # (n_test,) per-execution wastage
+    retries: np.ndarray  # (n_test,) per-execution retry counts
+
+    @property
+    def mean_wastage(self) -> float:
+        return float(self.wastage_gib_s.mean()) if len(self.wastage_gib_s) else 0.0
+
+    @property
+    def mean_retries(self) -> float:
+        return float(self.retries.mean()) if len(self.retries) else 0.0
+
+
+def run_execution(
+    series_mib: np.ndarray,
+    interval_s: float,
+    alloc: StepAllocation,
+    method: AllocationMethod,
+    node_cap_mib: float,
+    max_retries: int = 64,
+) -> tuple[float, int]:
+    """Replay one execution under a method's allocation + retry policy."""
+    cur = StepAllocation(alloc.boundaries.copy(), np.minimum(alloc.values, node_cap_mib))
+    total, retries = 0.0, 0
+    while True:
+        out = score_attempt_np(series_mib, interval_s, cur)
+        total += out.wastage_gib_s
+        if not out.failed:
+            return total, retries
+        retries += 1
+        if retries > max_retries:
+            raise RuntimeError("allocation never satisfied the task (check node cap)")
+        t_fail = (out.failure_index + 0.5) * interval_s
+        seg = cur.segment_of(t_fail)
+        cur = method.on_failure(cur, seg, node_cap_mib)
+        cur = StepAllocation(cur.boundaries, np.minimum(cur.values, node_cap_mib))
+
+
+def simulate_task(
+    trace: TaskTrace,
+    method_name: str,
+    train_frac: float,
+    cfg: SimConfig | None = None,
+) -> TaskResult:
+    cfg = cfg or SimConfig()
+    method = make_method(method_name, trace.default_mib, cfg.node_cap_mib, cfg.ksegments)
+    execs = trace.executions
+    n_train = int(len(execs) * train_frac)
+    for e in execs[:n_train]:
+        method.observe(e.input_size, e.series)
+
+    wastages, retries = [], []
+    for e in execs[n_train:]:
+        alloc = method.predict(e.input_size)
+        w, r = run_execution(e.series, trace.interval_s, alloc, method, cfg.node_cap_mib, cfg.max_retries)
+        wastages.append(w)
+        retries.append(r)
+        method.observe(e.input_size, e.series)  # online feedback loop
+
+    return TaskResult(
+        task=trace.name,
+        workflow=trace.workflow,
+        method=method_name,
+        train_frac=train_frac,
+        n_train=n_train,
+        n_test=len(execs) - n_train,
+        wastage_gib_s=np.asarray(wastages),
+        retries=np.asarray(retries),
+    )
+
+
+def simulate_suite(
+    workflows: list[WorkflowTrace],
+    methods: tuple[str, ...],
+    train_fracs: tuple[float, ...] = (0.25, 0.5, 0.75),
+    cfg: SimConfig | None = None,
+) -> list[TaskResult]:
+    """The full grid the paper reports: every eligible task x method x fraction."""
+    cfg = cfg or SimConfig()
+    results = []
+    for wf in workflows:
+        for trace in wf.eligible_tasks(cfg.min_executions):
+            for frac in train_fracs:
+                for m in methods:
+                    results.append(simulate_task(trace, m, frac, cfg))
+    return results
+
+
+# -- aggregations matching the paper's figures ------------------------------
+
+
+def fig7a_mean_wastage(results: list[TaskResult]) -> dict[tuple[str, float], float]:
+    """Mean over tasks of per-task mean wastage, keyed by (method, frac)."""
+    acc: dict[tuple[str, float], list[float]] = {}
+    for r in results:
+        acc.setdefault((r.method, r.train_frac), []).append(r.mean_wastage)
+    return {k: float(np.mean(v)) for k, v in acc.items()}
+
+
+def fig7b_lowest_counts(results: list[TaskResult]) -> dict[tuple[str, float], int]:
+    """Per (method, frac): number of tasks where the method ties the lowest
+    mean wastage (ties all score, as in the paper)."""
+    by_task: dict[tuple[str, float], dict[str, float]] = {}
+    for r in results:
+        by_task.setdefault((r.task, r.train_frac), {})[r.method] = r.mean_wastage
+    counts: dict[tuple[str, float], int] = {}
+    for (task, frac), per_method in by_task.items():
+        best = min(per_method.values())
+        for m, w in per_method.items():
+            counts.setdefault((m, frac), 0)
+            if np.isclose(w, best, rtol=1e-9, atol=1e-12):
+                counts[(m, frac)] += 1
+    return counts
+
+
+def fig7c_mean_retries(results: list[TaskResult]) -> dict[tuple[str, float], float]:
+    acc: dict[tuple[str, float], list[float]] = {}
+    for r in results:
+        acc.setdefault((r.method, r.train_frac), []).append(r.mean_retries)
+    return {k: float(np.mean(v)) for k, v in acc.items()}

@@ -1,0 +1,15 @@
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+from repro.train.train_step import TrainConfig, init_train_state, make_loss_fn, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "OptimizerConfig",
+    "apply_updates",
+    "init_opt_state",
+    "TrainConfig",
+    "init_train_state",
+    "make_loss_fn",
+    "make_train_step",
+    "Trainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,110 @@
+"""Training step: masked cross-entropy + MoE aux loss, microbatch gradient
+accumulation via ``lax.scan``, AdamW update.
+
+The accumulation scan is the memory lever for the >=67B configs: per-device
+activation footprint scales with the microbatch, while FSDP all-gathers
+amortize over the whole step.  Cross-entropy uses the one-hot-contraction
+form so the vocab-sharded logits never need a gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1
+    optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+
+
+def cross_entropy(logits, labels, mask):
+    """Mean masked CE; one-hot contraction keeps vocab-sharded logits local."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, _, aux = forward(
+            params,
+            cfg,
+            batch.get("tokens"),
+            features=batch.get("features"),
+            patch_embeds=batch.get("patch_embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+        )
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        mask = jnp.ones_like(labels, jnp.float32) if mask is None else mask.astype(jnp.float32)
+        ce = cross_entropy(logits, labels, mask)
+        return ce + MOE_AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def init_train_state(params, opt_cfg: OptimizerConfig | None = None):
+    return {"params": params, "opt": init_opt_state(params, opt_cfg), "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_batch(batch, accum: int):
+    """(B, ...) -> (accum, B/accum, ...); mrope (3, B, T) splits on dim 1."""
+
+    def split(path, a):
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        if keys and keys[-1] == "mrope_positions":
+            return a.reshape(a.shape[0], accum, -1, *a.shape[2:]).swapaxes(0, 1)
+        return a.reshape(accum, -1, *a.shape[1:])
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, train_cfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        accum = train_cfg.accum_steps
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_batch(batch, accum)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            from repro.models import flags
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro, unroll=accum if flags.COST_MODE else 1
+            )
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, opt_metrics = apply_updates(params, grads, state["opt"], train_cfg.optimizer)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,127 @@
+"""Training driver: jitted step, async checkpointing, restart-on-failure,
+and the paper's predictor watching the run.
+
+k-Segments integration (the framework-native use of the paper):
+* a ``MemoryMonitor`` records the host RSS series of every N-step training
+  "task" into the ``TimeSeriesStore`` (the paper's monitoring pipe);
+* the ``MemoryPredictorService`` learns the per-task (runtime, memory) models
+  online, and the launcher uses its step-function predictions to co-locate
+  host-side work (data prep, checkpoint transfers) against training jobs;
+* a ``StragglerDetector`` reuses the *runtime* half of the k-Segments model:
+  steps slower than the predicted runtime + offset by a factor are flagged
+  (at fleet scale: the signal for speculative rescheduling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import uuid
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig
+from repro.core.predictor import MemoryPredictorService
+from repro.data.pipeline import DataConfig, SyntheticLMData, make_host_batch
+from repro.distributed.fault_tolerance import SimulatedFailure, StragglerDetector
+from repro.models.model import init_params
+from repro.monitoring import MemoryMonitor, TimeSeriesStore
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    monitor_interval_s: float = 0.25
+    monitor_task_steps: int = 10  # steps per monitored "workflow task"
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        data_cfg: DataConfig,
+        train_cfg: TrainConfig | None = None,
+        trainer_cfg: TrainerConfig | None = None,
+        fail_at_step: int | None = None,  # fault-injection for tests/examples
+    ):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.train_cfg = train_cfg or TrainConfig()
+        self.tc = trainer_cfg or TrainerConfig()
+        self.fail_at_step = fail_at_step
+        self.data = SyntheticLMData(data_cfg)
+        self.store = TimeSeriesStore(interval_s=self.tc.monitor_interval_s)
+        self.predictor = MemoryPredictorService(method="ksegments-selective")
+        self.straggler = StragglerDetector()
+        self.ckpt = AsyncCheckpointer(self.tc.checkpoint_dir)
+        self._step_fn = jax.jit(make_train_step(cfg, self.train_cfg), donate_argnums=(0,))
+        self.metrics_log: list[dict] = []
+
+    # -- state ------------------------------------------------------------
+
+    def init_or_restore(self):
+        state = init_train_state(init_params(jax.random.PRNGKey(self.tc.seed), self.cfg))
+        last = latest_step(self.tc.checkpoint_dir)
+        if last is not None:
+            state = restore(self.tc.checkpoint_dir, last, state)
+            start = int(np.asarray(state["step"]))
+        else:
+            start = 0
+        return state, start
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self):
+        state, start = self.init_or_restore()
+        task_type = f"train:{self.cfg.name}"
+        tokens_per_task = (
+            self.data_cfg.global_batch * self.data_cfg.seq_len * self.tc.monitor_task_steps
+        )
+        step = start
+        while step < self.tc.steps:
+            # one monitored "workflow task" = monitor_task_steps train steps
+            chunk_end = min(step + self.tc.monitor_task_steps, self.tc.steps)
+            exec_id = f"{step}-{uuid.uuid4().hex[:6]}"
+            with MemoryMonitor(
+                self.store, task_type, exec_id,
+                interval_s=self.tc.monitor_interval_s, input_size=tokens_per_task,
+            ):
+                while step < chunk_end:
+                    t0 = time.monotonic()
+                    batch = make_host_batch(self.data, step)
+                    state, metrics = self._step_fn(state, batch)
+                    loss = float(np.asarray(metrics["loss"]))
+                    dt = time.monotonic() - t0
+                    self.straggler.observe(task_type, float(self.data_cfg.seq_len * self.data_cfg.global_batch), dt)
+                    step += 1
+                    if self.fail_at_step is not None and step == self.fail_at_step:
+                        self.fail_at_step = None  # fail once
+                        raise SimulatedFailure(step)
+                    if step % self.tc.log_every == 0 or step == self.tc.steps:
+                        self.metrics_log.append({"step": step, "loss": loss, "time_s": dt})
+                    if step % self.tc.checkpoint_every == 0:
+                        self.ckpt.save(step, state)
+            # feed the finished "task" to the paper's predictor
+            series = self.store.series(task_type, exec_id)
+            if len(series) >= 2:
+                self.predictor.observe(task_type, tokens_per_task, series)
+        self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state
+
+    def memory_plan(self):
+        """The k-Segments allocation the launcher would reserve for the next
+        training task of this type (None before any observation)."""
+        task_type = f"train:{self.cfg.name}"
+        tokens = self.data_cfg.global_batch * self.data_cfg.seq_len * self.tc.monitor_task_steps
+        try:
+            return self.predictor.predict(task_type, tokens, default_mib=4096.0)
+        except Exception:
+            return None

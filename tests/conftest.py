@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src-layout import without install; single real CPU device (the dry-run
+# forces 512 host devices in its own subprocess only — never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

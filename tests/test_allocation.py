@@ -1,0 +1,99 @@
+"""Step allocations, failure detection, wastage accounting, retries."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocation import (
+    StepAllocation,
+    run_with_retries_np,
+    score_attempt_np,
+    static_allocation,
+)
+
+
+def _alloc(bounds, values):
+    return StepAllocation(np.asarray(bounds, float), np.asarray(values, float))
+
+
+def test_eq1_right_open_semantics():
+    a = _alloc([10, 20, 30], [100, 200, 300])
+    assert a.at(np.asarray([0.0]))[0] == 100
+    assert a.at(np.asarray([10.0]))[0] == 100  # f = v_s for r_{s-1} < t <= r_s
+    assert a.at(np.asarray([10.5]))[0] == 200
+    assert a.at(np.asarray([30.0]))[0] == 300
+    assert a.at(np.asarray([99.0]))[0] == 300  # holds v_k past the end
+
+
+def test_success_wastage():
+    y = np.full(10, 50.0)
+    out = score_attempt_np(y, 2.0, static_allocation(80.0, 1.0))
+    assert not out.failed
+    assert np.isclose(out.wastage_gib_s, (80 - 50) * 10 * 2.0 / 1024.0)
+
+
+def test_failure_wastes_allocation_up_to_kill():
+    y = np.asarray([10.0, 10.0, 99.0, 10.0])
+    out = score_attempt_np(y, 2.0, static_allocation(50.0, 1.0))
+    assert out.failed and out.failure_index == 2
+    assert np.isclose(out.wastage_gib_s, 50.0 * 3 * 2.0 / 1024.0)
+
+
+def test_retry_strategies():
+    a = _alloc([10, 20, 30, 40], [10, 20, 30, 40])
+    sel = a.with_retry(1, "selective", 2.0)
+    assert list(sel.values) == [10, 40, 40, 40]  # monotonicity re-imposed
+    par = a.with_retry(1, "partial", 2.0)
+    assert list(par.values) == [10, 40, 60, 80]
+
+
+def test_run_with_retries_converges():
+    y = np.linspace(10, 1000, 50)
+    a = _alloc([20, 40, 60, 100], [15, 15, 15, 15])  # badly undersized
+    total, retries, final = run_with_retries_np(y, 2.0, a, "partial", 2.0, 128 * 1024)
+    assert retries > 0
+    assert np.all(final.values >= 15)
+    out = score_attempt_np(y, 2.0, final)
+    assert not out.failed
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    st.integers(1, 300),
+    st.integers(1, 6),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(["selective", "partial"]),
+)
+def test_property_retries_terminate_and_wastage_nonneg(j, k, seed, strategy):
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(1, 5000, j)
+    bounds = np.sort(rng.uniform(1, j * 2.0, k))
+    values = np.maximum.accumulate(rng.uniform(1, 100, k))
+    a = StepAllocation(bounds, values)
+    total, retries, final = run_with_retries_np(y, 2.0, a, strategy, 2.0, 128 * 1024)
+    assert total >= 0.0
+    assert retries <= 64
+    # final allocation succeeds and is monotone
+    assert not score_attempt_np(y, 2.0, final).failed
+    assert np.all(np.diff(final.values) >= 0)
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(2, 200), st.integers(0, 2**31 - 1))
+def test_property_batch_scorer_matches_np(j, seed):
+    import jax.numpy as jnp
+
+    from repro.core.allocation import attempt_outcomes_batch
+
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(1, 2000, j).astype(np.float32)
+    k = int(rng.integers(1, 6))
+    bounds = np.sort(rng.uniform(1, j * 2.0, k)).astype(np.float32)
+    values = np.maximum.accumulate(rng.uniform(10, 2500, k)).astype(np.float32)
+    a = StepAllocation(bounds.astype(float), values.astype(float))
+    ref = score_attempt_np(y, 2.0, a)
+    w, fi = attempt_outcomes_batch(
+        jnp.asarray(y[None]), jnp.asarray([j]), 2.0, jnp.asarray(bounds[None]), jnp.asarray(values[None])
+    )
+    assert int(fi[0]) == ref.failure_index
+    assert np.isclose(float(w[0]), ref.wastage_gib_s, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,64 @@
+"""Checkpointing: atomic writes, CRC validation, bf16 round-trip, async, GC."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4), "b": jnp.ones(4)},
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 10, t)
+    like = jax.eval_shape(lambda: t)
+    out = restore(str(tmp_path), 10, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_skips_tmp(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    save(str(tmp_path), 5, _tree())
+    os.makedirs(tmp_path / "step_00000009.tmp")  # crashed write
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_crc_detects_corruption(tmp_path):
+    t = _tree()
+    d = save(str(tmp_path), 2, t)
+    # corrupt one leaf file
+    victim = next(f for f in os.listdir(d) if f.endswith(".npy"))
+    path = os.path.join(d, victim)
+    raw = np.load(path)
+    raw_view = raw.view(np.uint8).copy()
+    raw_view[0] ^= 0xFF
+    np.save(path, raw_view.view(raw.dtype).reshape(raw.shape))
+    with pytest.raises(IOError):
+        restore(str(tmp_path), 2, jax.eval_shape(lambda: t))
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 3, _tree())
+    bad_like = jax.eval_shape(lambda: {"params": {"w": jnp.zeros((2, 2), jnp.bfloat16), "b": jnp.ones(4)}, "opt": {"step": jnp.asarray(0, jnp.int32)}})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 3, bad_like)

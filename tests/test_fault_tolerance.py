@@ -1,0 +1,61 @@
+"""Fault tolerance: restart-from-checkpoint integration, stragglers, elastic."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.distributed.elastic import plan_transition
+from repro.distributed.fault_tolerance import SimulatedFailure, StragglerDetector, run_with_recovery
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def test_recovery_resumes_from_checkpoint(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+    tc = TrainerConfig(
+        steps=16, checkpoint_every=5, checkpoint_dir=str(tmp_path),
+        monitor_interval_s=0.05, monitor_task_steps=8, log_every=4,
+    )
+    fails = [12]
+
+    def make_trainer():
+        fa = fails.pop(0) if fails else None
+        return Trainer(cfg, data_cfg, TrainConfig(), tc, fail_at_step=fa)
+
+    state, restarts = run_with_recovery(make_trainer)
+    assert restarts == 1
+    assert int(np.asarray(state["step"])) == 16
+
+
+def test_recovery_gives_up_after_max_restarts(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+    tc = TrainerConfig(steps=8, checkpoint_every=100, checkpoint_dir=str(tmp_path), monitor_task_steps=8)
+
+    def always_fail():
+        return Trainer(cfg, data_cfg, TrainConfig(), tc, fail_at_step=2)
+
+    with pytest.raises(SimulatedFailure):
+        run_with_recovery(always_fail, max_restarts=2)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(factor=1.5, min_observations=5)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        w = rng.uniform(10, 20)
+        det.observe("step", w, 0.1 * w * (1 + rng.normal(0, 0.01)))
+    assert not det.events
+    assert det.observe("step", 15.0, 10.0)  # 10s vs ~1.5s predicted
+    assert len(det.events) == 1
+    ev = det.events[0]
+    assert ev.runtime_s > 1.5 * ev.predicted_s
+
+
+def test_elastic_plan_preserves_global_batch():
+    p = plan_transition(global_batch=256, old_data=16, new_data=12, microbatch_per_device=1)
+    assert p.global_batch == 256
+    assert p.new_data * p.accum_steps * p.per_device_batch == 256
+    p2 = plan_transition(global_batch=256, old_data=16, new_data=16, microbatch_per_device=2)
+    assert p2.new_data * p2.accum_steps * p2.per_device_batch == 256

@@ -1,0 +1,123 @@
+"""The k-Segments model itself: offsets, monotonicity, recovery guarantees."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import KSegmentsConfig, KSegmentsModel, score_attempt_np
+
+
+def _ramp_series(x, noise_rng=None):
+    j = int(20 + 10 * x)
+    t = (np.arange(j) + 0.5) / j
+    y = 100 + 400 * x * t
+    if noise_rng is not None:
+        y = y * (1 + noise_rng.normal(0, 0.01, j))
+    return y.astype(np.float64)
+
+
+def test_monotone_allocation():
+    rng = np.random.default_rng(0)
+    m = KSegmentsModel(KSegmentsConfig(k=6))
+    for _ in range(25):
+        x = rng.uniform(1, 10)
+        m.observe(x, _ramp_series(x, rng))
+    alloc = m.predict(5.0)
+    assert np.all(np.diff(alloc.values) >= 0)
+    assert np.all(np.diff(alloc.boundaries) >= 0)
+    assert np.all(alloc.values >= 100.0)  # floor
+
+
+def test_insample_offsets_cover_history():
+    """After offsets, the current model never underpredicts any historical
+    segment peak (the paper's safety property)."""
+    rng = np.random.default_rng(1)
+    cfg = KSegmentsConfig(k=4, error_mode="insample")
+    m = KSegmentsModel(cfg)
+    xs, series = [], []
+    for _ in range(30):
+        x = rng.uniform(1, 10)
+        s = _ramp_series(x, rng)
+        xs.append(x)
+        series.append(s)
+        m.observe(x, s)
+    from repro.core.segmentation import segment_peaks_np
+
+    for x, s in zip(xs, series):
+        alloc = m.predict(x)
+        peaks = segment_peaks_np(s, cfg.k)
+        # predicted segment values must cover the historical peaks
+        assert np.all(alloc.values >= peaks - 1e-6), (alloc.values, peaks)
+
+
+def test_runtime_underprediction_offset():
+    """Runtime prediction is offset downward: it never exceeds any historical
+    runtime for the same input size after the offset."""
+    rng = np.random.default_rng(2)
+    m = KSegmentsModel(KSegmentsConfig(k=4))
+    for _ in range(40):
+        x = rng.uniform(1, 10)
+        m.observe(x, _ramp_series(x, rng))
+    # exact-linear world: prediction - offset <= true runtime
+    for x in (2.0, 5.0, 9.0):
+        true_rt = len(_ramp_series(x)) * 2.0
+        assert m.predict_runtime(x) <= true_rt * 1.05
+
+
+def test_exact_linear_recovery_no_failures():
+    """With a fixed runtime (no floor(j/k) boundary drift) noiseless linear
+    data is recovered exactly: the allocation never fails."""
+
+    def series(x, j=80):
+        t = (np.arange(j) + 0.5) / j
+        return (100 + 400 * x * t).astype(np.float64)
+
+    m = KSegmentsModel(KSegmentsConfig(k=4))
+    for x in np.linspace(1, 10, 30):
+        m.observe(float(x), series(x))
+    for x in (1.5, 4.2, 8.8):
+        alloc = m.predict(float(x))
+        out = score_attempt_np(series(x), 2.0, alloc)
+        assert not out.failed
+
+
+def test_boundary_discretization_failures_resolve_with_one_retry():
+    """Variable runtimes misalign the allocation's segment windows with the
+    actual floor(j/k) segmentation — the failure mode the paper's retry
+    strategies exist for.  A single selective retry must resolve it."""
+    from repro.core.allocation import run_with_retries_np
+
+    m = KSegmentsModel(KSegmentsConfig(k=4))
+    for x in np.linspace(1, 10, 30):
+        m.observe(float(x), _ramp_series(x))
+    for x in (1.5, 4.2, 8.8):
+        alloc = m.predict(float(x))
+        total, retries, _ = run_with_retries_np(_ramp_series(x), 2.0, alloc, "selective", 2.0, 128 * 1024)
+        assert retries <= 1
+        assert total < 100.0  # far below a static default's wastage
+
+
+def test_negative_prediction_floors_to_default():
+    m = KSegmentsModel(KSegmentsConfig(k=3, floor_mib=100.0))
+    # decreasing memory vs input size -> extrapolation goes negative
+    for x in (1.0, 2.0, 3.0):
+        m.observe(x, np.full(30, 500.0 - 150.0 * x))
+    alloc = m.predict(30.0)
+    assert np.all(alloc.values >= 100.0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 10), st.integers(0, 2**31 - 1))
+def test_property_alloc_always_valid(k, seed):
+    rng = np.random.default_rng(seed)
+    m = KSegmentsModel(KSegmentsConfig(k=k))
+    for _ in range(rng.integers(1, 15)):
+        x = float(rng.uniform(0.1, 100))
+        j = int(rng.integers(2, 200))
+        m.observe(x, rng.uniform(1, 10000, j))
+    alloc = m.predict(float(rng.uniform(0.1, 200)))
+    assert len(alloc.values) == k
+    assert np.all(np.isfinite(alloc.values))
+    assert np.all(alloc.values > 0)
+    assert np.all(np.diff(alloc.values) >= 0)
+    assert alloc.boundaries[-1] >= 2.0 - 1e-9  # at least one interval

@@ -1,0 +1,42 @@
+"""Monitoring substrate: store resampling + live RSS collection."""
+
+import time
+
+import numpy as np
+
+from repro.monitoring import MemoryMonitor, TimeSeriesStore, sample_rss_mib
+
+
+def test_store_grid_resampling():
+    store = TimeSeriesStore(interval_s=1.0)
+    store.write("t", "e0", 0.0, 10.0)
+    store.write("t", "e0", 2.5, 30.0)
+    store.write("t", "e0", 4.0, 20.0)
+    s = store.series("t", "e0")
+    # LOCF on the 1s grid: t=0,1,2 -> 10; t=3 -> 30 (last <=3 is 2.5); t=4 -> 20
+    np.testing.assert_allclose(s, [10, 10, 10, 30, 20])
+
+
+def test_store_metadata_and_listing():
+    store = TimeSeriesStore()
+    store.annotate("t", "e1", input_size=123.0)
+    store.write("t", "e1", 0.0, 5.0)
+    assert store.executions("t") == ["e1"]
+    assert store.task_types() == ["t"]
+    assert store.metadata("t", "e1")["input_size"] == 123.0
+
+
+def test_rss_sampling_positive():
+    assert sample_rss_mib() > 1.0  # this very process
+
+
+def test_memory_monitor_records_real_series():
+    store = TimeSeriesStore(interval_s=0.05)
+    with MemoryMonitor(store, "task", "e", interval_s=0.05, input_size=42.0):
+        junk = [bytearray(2_000_000) for _ in range(20)]  # grow RSS
+        time.sleep(0.25)
+        del junk
+    series = store.series("task", "e")
+    assert len(series) >= 2
+    assert series.max() > 0
+    assert store.metadata("task", "e")["input_size"] == 42.0

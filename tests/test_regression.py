@@ -1,0 +1,92 @@
+"""Unit + property tests for the sufficient-statistic OLS."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import regression as R
+
+
+def test_matches_polyfit():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 100, 50)
+    y = 3.5 * x + 12.0 + rng.normal(0, 2, 50)
+    stats = np.zeros(R.NUM_STATS)
+    for xi, yi in zip(x, y):
+        stats = R.update_stats_np(stats, xi, yi)
+    icpt, slope = R.fit_np(stats)
+    ref = np.polyfit(x, y, 1)
+    assert np.isclose(slope, ref[0], rtol=1e-8)
+    assert np.isclose(icpt, ref[1], rtol=1e-8)
+
+
+def test_degenerate_cases():
+    # no data
+    icpt, slope = R.fit_np(np.zeros(R.NUM_STATS))
+    assert icpt == 0.0 and slope == 0.0
+    # one point -> mean model
+    s = R.update_stats_np(np.zeros(R.NUM_STATS), 5.0, 7.0)
+    icpt, slope = R.fit_np(s)
+    assert slope == 0.0 and np.isclose(icpt, 7.0)
+    # identical x -> mean model
+    s = np.zeros(R.NUM_STATS)
+    for y in (1.0, 5.0, 9.0):
+        s = R.update_stats_np(s, 2.0, y)
+    icpt, slope = R.fit_np(s)
+    assert slope == 0.0 and np.isclose(icpt, 5.0)
+
+
+def test_banked_segments_match_individual():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 10, 20)
+    ys = rng.uniform(0, 100, (20, 4))  # 4 segments
+    bank = np.zeros((4, R.NUM_STATS))
+    for xi, yrow in zip(x, ys):
+        bank = R.update_stats_np(bank, xi, yrow)
+    for s in range(4):
+        solo = np.zeros(R.NUM_STATS)
+        for xi, yi in zip(x, ys[:, s]):
+            solo = R.update_stats_np(solo, xi, yi)
+        assert np.allclose(bank[s], solo)
+
+
+def test_jnp_matches_np():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 50, 30)
+    y = rng.uniform(0, 500, 30)
+    s_np = np.zeros(R.NUM_STATS)
+    s_j = R.empty_stats()
+    for xi, yi in zip(x, y):
+        s_np = R.update_stats_np(s_np, xi, yi)
+        s_j = R.update_stats(s_j, xi, yi)
+    pn = R.predict_np(s_np, 25.0)
+    pj = float(R.predict(s_j, 25.0))
+    assert np.isclose(pn, pj, rtol=1e-3)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0, 1e3, allow_nan=False), st.floats(-1e3, 1e3, allow_nan=False)
+        ),
+        min_size=2,
+        max_size=40,
+    )
+)
+def test_property_interpolates_exact_line(pairs):
+    """Fitting points that lie exactly on a line recovers it (when x varies)."""
+    a, b = 2.0, -3.0
+    stats = np.zeros(R.NUM_STATS)
+    xs = [p[0] for p in pairs]
+    for x, _ in pairs:
+        stats = R.update_stats_np(stats, x, a + b * x)
+    icpt, slope = R.fit_np(stats)
+    if max(xs) - min(xs) > 1e-3:  # identifiable
+        assert np.isclose(slope, b, atol=1e-5)
+        assert np.isclose(icpt, a, atol=1e-3)
+    pred = R.predict_np(stats, np.asarray(xs))
+    assert np.allclose(pred, [a + b * x for x in xs], atol=1e-2)

@@ -1,0 +1,62 @@
+"""Roofline derivation unit tests: HLO collective parsing + term math."""
+
+import numpy as np
+
+from repro.launch import roofline as RL
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+%all-gather = f32[16,512]{0,1} all-gather(%copy), channel_id=1, replica_groups=[4,4]<=[16], dimensions={1}
+%all-reduce.3 = bf16[8,4096,3072]{2,1,0} all-reduce(%x), channel_id=2, replica_groups=[32,16]<=[512]
+%reduce-scatter.1 = f32[64]{0} reduce-scatter(%y), replica_groups=[2,8]<=[16]
+%all-gather-start = f32[128]{0} all-gather-start(%z), replica_groups=[1,4]<=[4]
+%all-gather-done = f32[128]{0} all-gather-done(%all-gather-start)
+%foo = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_collective_parse():
+    out = RL.collective_bytes(HLO_SAMPLE)
+    # all-gather: 16*512*4 * (4-1)/4
+    assert out["all-gather"] == int(16 * 512 * 4 * 3 / 4) + int(128 * 4 * 3 / 4)
+    # all-reduce: 2 * size * (16-1)/16
+    assert out["all-reduce"] == int(2 * 8 * 4096 * 3072 * 2 * 15 / 16)
+    # reduce-scatter: result * (g-1)
+    assert out["reduce-scatter"] == 64 * 4 * 7
+    assert out["all-to-all"] == 0
+
+
+def test_done_ops_not_double_counted():
+    out = RL.collective_bytes(HLO_SAMPLE)
+    # -start counted once; -done skipped
+    assert out["all-gather"] < int(16 * 512 * 4 * 3 / 4) + 2 * int(128 * 4 * 3 / 4)
+
+
+def test_roofline_terms():
+    rf = RL.Roofline(
+        flops_per_device=197e12,  # exactly one second of compute
+        bytes_per_device=819e9 / 2,  # half a second of memory
+        collective_bytes_per_device=50e9 * 2,  # two seconds of collectives
+        collective_by_type={},
+        model_flops_global=197e12 * 256,  # would be 100% MFU at compute bound
+        chips=256,
+    )
+    assert np.isclose(rf.compute_s, 1.0)
+    assert np.isclose(rf.memory_s, 0.5)
+    assert np.isclose(rf.collective_s, 2.0)
+    assert rf.dominant == "collective"
+    assert np.isclose(rf.bound_s, 2.0)
+    assert np.isclose(rf.mfu_bound, 0.5)  # collective bound halves the MFU
+    assert np.isclose(rf.useful_flops_ratio, 1.0)
+
+
+def test_model_flops():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("llama3.2-3b")
+    n = cfg.active_param_count()
+    assert np.isclose(RL.model_flops(cfg, SHAPES["train_4k"]), 6 * n * 4096 * 256)
+    assert np.isclose(RL.model_flops(cfg, SHAPES["decode_32k"]), 2 * n * 128)
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert moe.active_param_count() < 0.15 * moe.param_count()  # a22b of 235b

@@ -1,0 +1,60 @@
+"""Segmentation: the paper's exact formula + padded-batch equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.segmentation import segment_bounds, segment_peaks, segment_peaks_np
+
+
+def test_paper_formula_exact():
+    # j=10, k=4 -> i=2: segments [0:2),[2:4),[4:6),[6:10) (last absorbs rest)
+    y = np.asarray([1, 9, 2, 3, 7, 1, 4, 8, 2, 6], dtype=np.float64)
+    peaks = segment_peaks_np(y, 4)
+    assert np.array_equal(peaks, [9, 3, 7, 8])
+
+
+def test_short_series_fallback():
+    y = np.asarray([5.0, 2.0])
+    peaks = segment_peaks_np(y, 4)  # j < k: i=1, last segment empty-extends
+    assert peaks[0] == 5.0 and peaks[-1] == 2.0
+    assert len(peaks) == 4
+    assert np.all(np.isfinite(peaks))
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    st.integers(1, 200),
+    st.integers(1, 12),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_peaks_cover_series_max(j, k, seed):
+    """max over segment peaks == series max, and each peak is attained."""
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(0, 1000, j)
+    peaks = segment_peaks_np(y, k)
+    assert np.isclose(peaks.max(), y.max())
+    for p in peaks:
+        assert np.any(np.isclose(y, p))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 150), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_property_jnp_matches_np(j, k, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(0, 100, j).astype(np.float32)
+    ref = segment_peaks_np(y, k)
+    T = j + rng.integers(0, 7)
+    padded = np.zeros((1, T), np.float32)
+    padded[0, :j] = y
+    out = np.asarray(segment_peaks(jnp.asarray(padded), jnp.asarray([j]), k))[0]
+    assert np.allclose(out, ref, rtol=1e-6)
+
+
+def test_bounds_batch():
+    starts, ends = segment_bounds(jnp.asarray([10, 3]), 4)
+    assert starts.shape == (2, 4)
+    # row 0: i=2 -> [0,2,4,6], ends [2,4,6,10]
+    assert list(np.asarray(starts)[0]) == [0, 2, 4, 6]
+    assert list(np.asarray(ends)[0]) == [2, 4, 6, 10]

@@ -1,0 +1,58 @@
+"""Online simulation protocol: method behaviours the paper reports."""
+
+import numpy as np
+import pytest
+
+from repro.sim import generate_suite, simulate_task, simulate_suite
+from repro.sim.simulator import SimConfig, fig7a_mean_wastage, fig7b_lowest_counts, fig7c_mean_retries
+
+METHODS = ("default", "witt-lr", "ppm", "ppm-improved", "ksegments-selective", "ksegments-partial")
+
+
+@pytest.fixture(scope="module")
+def results():
+    wfs = generate_suite(seed=0, scale=0.15)
+    return simulate_suite(wfs, METHODS, (0.5,), SimConfig(min_executions=10))
+
+
+def test_default_never_retries(results):
+    for r in results:
+        if r.method == "default":
+            assert r.mean_retries == 0.0
+
+
+def test_ksegments_beats_default(results):
+    w = fig7a_mean_wastage(results)
+    assert w[("ksegments-selective", 0.5)] < w[("default", 0.5)]
+    assert w[("ksegments-partial", 0.5)] < w[("default", 0.5)]
+
+
+def test_ksegments_beats_best_baseline(results):
+    """The paper's headline claim, qualitatively."""
+    w = fig7a_mean_wastage(results)
+    best_baseline = min(w[(m, 0.5)] for m in ("witt-lr", "ppm", "ppm-improved"))
+    assert w[("ksegments-selective", 0.5)] < best_baseline
+
+
+def test_fig7b_counts_sum(results):
+    counts = fig7b_lowest_counts(results)
+    n_tasks = len({r.task for r in results})
+    # every task awards >= 1 point (ties can award several)
+    assert sum(counts.values()) >= n_tasks
+    ks = counts.get(("ksegments-selective", 0.5), 0) + counts.get(("ksegments-partial", 0.5), 0)
+    assert ks > 0
+
+
+def test_retries_all_finite(results):
+    r7c = fig7c_mean_retries(results)
+    assert all(np.isfinite(v) for v in r7c.values())
+
+
+def test_more_training_data_helps_ksegments():
+    wfs = generate_suite(seed=0, scale=0.15)
+    cfg = SimConfig(min_executions=10)
+    lo = simulate_suite(wfs, ("ksegments-selective",), (0.25,), cfg)
+    hi = simulate_suite(wfs, ("ksegments-selective",), (0.75,), cfg)
+    lo_r = np.mean([r.mean_retries for r in lo])
+    hi_r = np.mean([r.mean_retries for r in hi])
+    assert hi_r <= lo_r + 1e-9  # paper: retries fall with training data

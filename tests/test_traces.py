@@ -1,0 +1,44 @@
+"""Synthetic trace generator: determinism + calibration to the paper stats."""
+
+import numpy as np
+
+from repro.sim import generate_eager, generate_sarek, generate_suite
+
+
+def test_determinism():
+    a = generate_sarek(seed=7, scale=0.2)
+    b = generate_sarek(seed=7, scale=0.2)
+    for ta, tb in zip(a.tasks, b.tasks):
+        assert ta.name == tb.name and ta.default_mib == tb.default_mib
+        for ea, eb in zip(ta.executions, tb.executions):
+            assert ea.input_size == eb.input_size
+            np.testing.assert_array_equal(ea.series, eb.series)
+
+
+def test_paper_calibration():
+    sarek = generate_sarek(seed=0)
+    eager = generate_eager(seed=0)
+    assert len(sarek.tasks) == 29 and len(eager.tasks) == 18
+    assert max(t.n_executions for t in sarek.tasks) == 1512
+    assert max(t.n_executions for t in eager.tasks) == 136
+    # exactly 33 evaluated task types (>= 20 executions)
+    assert len(sarek.eligible_tasks()) + len(eager.eligible_tasks()) == 33
+    # peak range consistent with the published numbers (10 MB .. 23 GB)
+    peaks = [e.series.max() for t in sarek.tasks for e in t.executions]
+    assert min(peaks) < 100 and max(peaks) < 100 * 1024
+
+
+def test_defaults_never_fail():
+    """The developers' defaults are the paper's zero-retry sanity baseline."""
+    for wf in generate_suite(seed=1, scale=0.15):
+        for t in wf.tasks:
+            for e in t.executions:
+                assert e.series.max() <= t.default_mib
+
+
+def test_series_positive_and_peaked():
+    wf = generate_eager(seed=2, scale=0.15)
+    for t in wf.tasks:
+        for e in t.executions:
+            assert np.all(e.series > 0)
+            assert len(e.series) >= 2
