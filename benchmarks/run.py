@@ -7,7 +7,7 @@ figure's headline quantity).
   fig7c — mean retries per method
   fig8  — wastage vs k for two contrasting task shapes
   adaptive_k — per-task online k re-optimization vs fixed k=4 (paper Sec. V)
-  kernels — Pallas (interpret) vs jnp-oracle timing on corpus-scale batches
+  kernels — Pallas kernels vs jnp-oracle timing on corpus-scale batches
   admission — serving HBM reservation wastage: segment-wise vs peak
   cluster — scheduler-level dynamic reservations vs static policies
   roofline — aggregated dry-run roofline table (reads results/dryrun/)
@@ -15,6 +15,27 @@ figure's headline quantity).
 Run all:    PYTHONPATH=src python -m benchmarks.run
 Run one:    PYTHONPATH=src python -m benchmarks.run fig7a
 Fast mode:  REPRO_BENCH_SCALE=0.15 PYTHONPATH=src python -m benchmarks.run
+JSON out:   PYTHONPATH=src python -m benchmarks.run fig7a --json BENCH_fig7.json
+
+Engine selection
+----------------
+The fig7 grid and the fig8 k-sweep run on two engines:
+
+* ``batch`` (default) — ``repro.sim.batch_engine``: the whole grid as a few
+  vmapped ``lax.scan`` device programs; fractions are post-hoc masks.
+* ``python`` — ``repro.sim.simulator``: the sequential reference oracle, one
+  ``simulate_task`` per (task, method, fraction) cell.
+
+``REPRO_BENCH_ENGINE=python|batch`` picks which engine's results feed the
+figure rows.  ``fig7a`` always times *both* engines on the identical grid and
+prints ``fig7a/python_engine``, ``fig7a/batch_engine_cold`` (first call,
+includes jit compile) and ``fig7a/batch_engine`` (steady state, with the
+speedup) so the comparison lives in one run.  Both engines use the
+k-Segments "progressive" error mode here so their grids are comparable cell
+by cell (the parity tests in tests/test_batch_engine.py assert per-execution
+agreement); simulation *tests* keep exercising the insample default.
+``REPRO_PALLAS_INTERPRET=0`` additionally switches the ``kernels`` bench to
+the compiled Pallas path on TPU hosts (see repro.kernels.ops).
 """
 
 from __future__ import annotations
@@ -30,12 +51,28 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.35"))
 SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+ENGINE = os.environ.get("REPRO_BENCH_ENGINE", "batch")
+if ENGINE not in ("batch", "python"):
+    raise SystemExit(f"REPRO_BENCH_ENGINE must be 'batch' or 'python', got {ENGINE!r}")
 METHODS = ("default", "witt-lr", "ppm", "ppm-improved", "ksegments-selective", "ksegments-partial")
 FRACS = (0.25, 0.5, 0.75)
 
+_JSON_ROWS: list[dict] = []
 
-def _row(name: str, us: float, derived: str) -> None:
+
+def _row(name: str, us: float, derived: str, engine: str = "-") -> None:
     print(f"{name},{us:.1f},{derived}")
+    _JSON_ROWS.append(
+        {
+            "bench": name.split("/", 1)[0],
+            "name": name,
+            "us_per_call": round(us, 1),
+            "derived": derived,
+            "engine": engine,
+            "scale": SCALE,
+            "seed": SEED,
+        }
+    )
 
 
 _SUITE_CACHE: dict = {}
@@ -49,33 +86,82 @@ def _suite():
     return _SUITE_CACHE["wfs"]
 
 
-def _grid_results():
-    if "res" not in _SUITE_CACHE:
+def _grid_cfg():
+    from repro.core.ksegments import KSegmentsConfig
+    from repro.sim.simulator import SimConfig
+
+    return SimConfig(
+        min_executions=max(int(20 * SCALE), 8),
+        ksegments=KSegmentsConfig(error_mode="progressive"),
+    )
+
+
+def _python_results():
+    """Sequential-engine grid (cached): (results, wall_s)."""
+    if "res_py" not in _SUITE_CACHE:
         from repro.sim import simulate_suite
-        from repro.sim.simulator import SimConfig
 
         t0 = time.time()
-        res = simulate_suite(_suite(), METHODS, FRACS, SimConfig(min_executions=max(int(20 * SCALE), 8)))
-        _SUITE_CACHE["res"] = res
-        _SUITE_CACHE["res_time"] = time.time() - t0
-    return _SUITE_CACHE["res"], _SUITE_CACHE["res_time"]
+        _SUITE_CACHE["res_py"] = simulate_suite(_suite(), METHODS, FRACS, _grid_cfg())
+        _SUITE_CACHE["res_py_time"] = time.time() - t0
+    return _SUITE_CACHE["res_py"], _SUITE_CACHE["res_py_time"]
+
+
+def _batch_results():
+    """Batch-engine grid (cached): (results, cold_wall_s, warm_wall_s)."""
+    if "res_batch" not in _SUITE_CACHE:
+        from repro.sim.batch_engine import simulate_grid
+
+        cfg = _grid_cfg()
+        t0 = time.time()
+        simulate_grid(_suite(), METHODS, FRACS, cfg)
+        _SUITE_CACHE["res_batch_cold"] = time.time() - t0
+        t0 = time.time()
+        _SUITE_CACHE["res_batch"] = simulate_grid(_suite(), METHODS, FRACS, cfg)
+        _SUITE_CACHE["res_batch_time"] = time.time() - t0
+    return _SUITE_CACHE["res_batch"], _SUITE_CACHE["res_batch_cold"], _SUITE_CACHE["res_batch_time"]
+
+
+def _grid_results():
+    """Figure-source grid per REPRO_BENCH_ENGINE: (results, wall_s)."""
+    if ENGINE == "python":
+        return _python_results()
+    res, _cold, warm = _batch_results()
+    return res, warm
 
 
 def bench_fig7a() -> None:
-    """Fig. 7a: average wastage (GiB*s) per method and training fraction."""
+    """Fig. 7a: average wastage (GiB*s) per method and training fraction,
+    plus the engine comparison (same grid on both engines, one run)."""
     from repro.sim.simulator import fig7a_mean_wastage
+
+    res_py, wall_py = _python_results()
+    _res_b, cold, warm = _batch_results()
+    n = len(res_py)
+    _row("fig7a/python_engine", wall_py * 1e6 / max(n, 1), f"wall_s={wall_py:.2f}", engine="python")
+    _row(
+        "fig7a/batch_engine_cold",
+        cold * 1e6 / max(n, 1),
+        f"wall_s={cold:.2f} (includes jit compile)",
+        engine="batch",
+    )
+    _row(
+        "fig7a/batch_engine",
+        warm * 1e6 / max(n, 1),
+        f"wall_s={warm:.2f} speedup={wall_py / warm:.1f}x",
+        engine="batch",
+    )
 
     res, t = _grid_results()
     w = fig7a_mean_wastage(res)
-    n = len(res)
     for frac in FRACS:
         for m in METHODS:
-            _row(f"fig7a/{m}@{frac}", t * 1e6 / max(n, 1), f"wastage_gib_s={w[(m, frac)]:.1f}")
+            _row(f"fig7a/{m}@{frac}", t * 1e6 / max(n, 1), f"wastage_gib_s={w[(m, frac)]:.1f}", engine=ENGINE)
     best_base = min(w[(m, 0.75)] for m in ("witt-lr", "ppm", "ppm-improved"))
     red_sel = 100 * (1 - w[("ksegments-selective", 0.75)] / best_base)
     red_par = 100 * (1 - w[("ksegments-partial", 0.75)] / best_base)
-    _row("fig7a/reduction_selective@0.75", t * 1e6 / max(n, 1), f"pct={red_sel:.2f} (paper 29.48)")
-    _row("fig7a/reduction_partial@0.75", t * 1e6 / max(n, 1), f"pct={red_par:.2f} (paper 22.39)")
+    _row("fig7a/reduction_selective@0.75", t * 1e6 / max(n, 1), f"pct={red_sel:.2f} (paper 29.48)", engine=ENGINE)
+    _row("fig7a/reduction_partial@0.75", t * 1e6 / max(n, 1), f"pct={red_par:.2f} (paper 22.39)", engine=ENGINE)
 
 
 def bench_fig7b() -> None:
@@ -86,7 +172,7 @@ def bench_fig7b() -> None:
     c = fig7b_lowest_counts(res)
     for frac in FRACS:
         for m in METHODS:
-            _row(f"fig7b/{m}@{frac}", t * 1e6 / max(len(res), 1), f"lowest_count={c.get((m, frac), 0)}")
+            _row(f"fig7b/{m}@{frac}", t * 1e6 / max(len(res), 1), f"lowest_count={c.get((m, frac), 0)}", engine=ENGINE)
 
 
 def bench_fig7c() -> None:
@@ -97,29 +183,51 @@ def bench_fig7c() -> None:
     r = fig7c_mean_retries(res)
     for frac in FRACS:
         for m in METHODS:
-            _row(f"fig7c/{m}@{frac}", t * 1e6 / max(len(res), 1), f"retries={r[(m, frac)]:.4f}")
+            _row(f"fig7c/{m}@{frac}", t * 1e6 / max(len(res), 1), f"retries={r[(m, frac)]:.4f}", engine=ENGINE)
 
 
 def bench_fig8() -> None:
     """Fig. 8: wastage as a function of k for two contrasting task shapes
-    (a zigzag/sawtooth task vs a smooth ramp/staged one), 50% training."""
-    from repro.sim.simulator import SimConfig, simulate_task
-    from repro.core.ksegments import KSegmentsConfig
+    (a zigzag/sawtooth task vs a smooth ramp/staged one), 50% training.
 
+    One vmap over the traced segment count per task (progressive offsets)
+    instead of 15 sequential simulations."""
+    ks = tuple(range(1, 16))
     wfs = _suite()
     eligible = [t for wf in wfs for t in wf.eligible_tasks(max(int(20 * SCALE), 8))]
     saw = next(t for t in eligible if t.family == "sawtooth")
     smooth = next(t for t in eligible if t.family in ("ramp", "staged"))
+    if ENGINE == "python":
+        from repro.core.ksegments import KSegmentsConfig
+        from repro.sim.simulator import SimConfig, simulate_task
+
+        for trace in (saw, smooth):
+            for k in ks:
+                cfg = SimConfig(ksegments=KSegmentsConfig(k=k, error_mode="progressive"))
+                t0 = time.time()
+                r = simulate_task(trace, "ksegments-selective", 0.5, cfg)
+                dt = time.time() - t0
+                _row(
+                    f"fig8/{trace.family}/k={k}",
+                    dt * 1e6 / max(r.n_test, 1),
+                    f"wastage_gib_s={r.mean_wastage:.2f}",
+                    engine=ENGINE,
+                )
+        return
+    from repro.sim.batch_engine import simulate_ksweep
+
     for trace in (saw, smooth):
-        for k in range(1, 16):
-            cfg = SimConfig(ksegments=KSegmentsConfig(k=k))
-            t0 = time.time()
-            r = simulate_task(trace, "ksegments-selective", 0.5, cfg)
-            dt = time.time() - t0
+        simulate_ksweep(trace, ks, 0.5, _grid_cfg())  # compile warmup
+        t0 = time.time()
+        sweep = simulate_ksweep(trace, ks, 0.5, _grid_cfg())
+        dt = time.time() - t0
+        for k in ks:
+            r = sweep[k]
             _row(
                 f"fig8/{trace.family}/k={k}",
-                dt * 1e6 / max(r.n_test, 1),
+                dt * 1e6 / max(r.n_test, 1) / len(ks),
                 f"wastage_gib_s={r.mean_wastage:.2f}",
+                engine=ENGINE,
             )
 
 
@@ -272,10 +380,26 @@ BENCHES = {
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires a path argument")
+        del args[i : i + 2]
+    names = args or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; available: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(_JSON_ROWS, f, indent=1)
+        print(f"# wrote {len(_JSON_ROWS)} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

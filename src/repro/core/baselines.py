@@ -33,9 +33,19 @@ class _PeakBaseline:
         self.floor_mib = float(floor_mib)
         self._n = 0
 
-    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
-        series = np.asarray(series_mib, dtype=np.float64)
-        self._observe(float(input_size), float(series.max()), float(len(series)))
+    def observe(
+        self,
+        input_size: float,
+        series_mib: np.ndarray,
+        *,
+        peak: float | None = None,
+        n_samples: float | None = None,
+    ) -> None:
+        if peak is None:
+            peak = float(np.asarray(series_mib, dtype=np.float64).max())
+        if n_samples is None:
+            n_samples = float(len(series_mib))
+        self._observe(float(input_size), float(peak), float(n_samples))
         self._n += 1
 
     def _observe(self, x: float, peak: float, samples: float) -> None:

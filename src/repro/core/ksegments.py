@@ -47,6 +47,12 @@ class KSegmentsConfig:
     # max of one-step-ahead errors (cheaper, O(1) state, strictly more
     # conservative; used by the lax.scan batch simulator).
     error_mode: str = "insample"
+    # Insample residual extremes are maintained incrementally and refreshed
+    # over the full history only when the fit has drifted enough (relative to
+    # the offset scale) to move an offset materially — sub-0.1% offset error
+    # in exchange for amortized O(1) bookkeeping instead of an O(n) rescan
+    # per observation.
+    insample_refresh_tol: float = 1e-3
 
 
 class KSegmentsModel:
@@ -61,10 +67,20 @@ class KSegmentsModel:
         self._seg_under_err = np.zeros(k, dtype=np.float64)  # max(actual_peak - pred, 0)
         self._n_obs = 0
         self._x0 = 0.0  # input-size reference shift (first observation), for conditioning
-        # History for in-sample residual offsets (error_mode="insample").
-        self._hist_u: list[float] = []
-        self._hist_rt: list[float] = []
-        self._hist_peaks: list[np.ndarray] = []
+        # History for in-sample residual offsets (error_mode="insample"),
+        # kept in amortized-growth buffers (rows [0, _n_obs) are live).
+        self._hist_u = np.empty(0, dtype=np.float64)
+        self._hist_rt = np.empty(0, dtype=np.float64)
+        self._hist_peaks = np.empty((0, k), dtype=np.float64)
+        # Lazy-refresh bookkeeping: the fits the stored residual extremes were
+        # last computed under and the input-shift radius (a fit change
+        # (da, db) moves any historical residual by at most |da| + |db|*umax).
+        # The current drift bounds are *added* to the offsets at prediction
+        # time, so a stale extreme is conservative, never unsafe.
+        self._ref_fits: tuple | None = None
+        self._rt_drift = 0.0
+        self._seg_drift = 0.0
+        self._umax = 0.0
 
     # -- state ------------------------------------------------------------
 
@@ -85,12 +101,19 @@ class KSegmentsModel:
 
     # -- online learning ----------------------------------------------------
 
-    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
-        """Fold one finished execution into the model (O(T) + O(k))."""
+    def observe(self, input_size: float, series_mib: np.ndarray, *, peaks: np.ndarray | None = None) -> None:
+        """Fold one finished execution into the model (O(k) given ``peaks``).
+
+        ``peaks`` are the series' k-segment peaks; grid evaluators precompute
+        them once per (trace, k) and pass them in, otherwise they are derived
+        here (O(T)).
+        """
         cfg = self.config
-        series = np.asarray(series_mib, dtype=np.float64)
-        runtime = len(series) * cfg.interval_s
-        peaks = segment_peaks_np(series, cfg.k)
+        runtime = len(series_mib) * cfg.interval_s
+        if peaks is None:
+            peaks = segment_peaks_np(np.asarray(series_mib, dtype=np.float64), cfg.k)
+        else:
+            peaks = np.asarray(peaks, dtype=np.float64)
         if self._n_obs == 0:
             self._x0 = float(input_size)
         u = float(input_size) - self._x0
@@ -106,22 +129,74 @@ class KSegmentsModel:
         self._n_obs += 1
 
         if cfg.error_mode == "insample":
-            # Residual extremes of the *current* fit over the full history.
-            self._hist_u.append(u)
-            self._hist_rt.append(runtime)
-            self._hist_peaks.append(peaks)
-            hu = np.asarray(self._hist_u)
-            rt_res = regression.predict_np(self._rt_stats, hu) - np.asarray(self._hist_rt)
-            self._rt_over_err = float(rt_res.max())  # largest runtime overprediction
-            seg_pred = regression.predict_np(self._seg_stats[None, :, :], hu[:, None])
-            self._seg_under_err = np.max(np.stack(self._hist_peaks) - seg_pred, axis=0)
+            self._observe_insample(u, runtime, peaks)
+
+    def _observe_insample(self, u: float, runtime: float, peaks: np.ndarray) -> None:
+        """Maintain the extreme residuals of the *current* fit over history.
+
+        Recomputing them from scratch per observation is O(n) — O(n^2) per
+        task.  Instead the stored extremes are extended with the new point's
+        residual under the current fit, and a drift bound tracks how much any
+        *historical* residual can have moved since the extremes were last
+        computed exactly: a fit change (d_intercept, d_slope) moves every
+        residual by at most |d_intercept| + |d_slope| * max|u|.  Only when
+        that bound could change an offset materially (relative
+        ``insample_refresh_tol``) is the full history rescanned — fits
+        converge as observations accumulate, so refreshes thin out and the
+        amortized maintenance cost is O(1) per observation.
+        """
+        n = self._n_obs  # already includes this observation
+        if n > len(self._hist_u):  # amortized doubling growth
+            cap = max(2 * len(self._hist_u), 16)
+            k = self._hist_peaks.shape[1]
+            self._hist_u = np.resize(self._hist_u, cap)
+            self._hist_rt = np.resize(self._hist_rt, cap)
+            grown = np.empty((cap, k), dtype=np.float64)
+            grown[: n - 1] = self._hist_peaks[: n - 1]
+            self._hist_peaks = grown
+        self._hist_u[n - 1] = u
+        self._hist_rt[n - 1] = runtime
+        self._hist_peaks[n - 1] = peaks
+        self._umax = max(self._umax, abs(u))
+
+        rt_fit = regression.fit_np(self._rt_stats)  # (intercept, slope) scalars
+        seg_fit = regression.fit_np(self._seg_stats)  # ((k,), (k,))
+        if self._ref_fits is None:
+            self._refresh_insample(rt_fit, seg_fit)
+            return
+        ref_rt, ref_seg = self._ref_fits
+        self._rt_drift = abs(rt_fit[0] - ref_rt[0]) + abs(rt_fit[1] - ref_rt[1]) * self._umax
+        self._seg_drift = float(np.max(np.abs(seg_fit[0] - ref_seg[0]) + np.abs(seg_fit[1] - ref_seg[1]) * self._umax))
+
+        # The new point's residual is exact under the current fit; stored
+        # historical extremes are stale by at most the drift bound.
+        self._rt_over_err = max(self._rt_over_err, float(rt_fit[0] + rt_fit[1] * u) - runtime)
+        self._seg_under_err = np.maximum(self._seg_under_err, peaks - (seg_fit[0] + seg_fit[1] * u))
+
+        tol = self.config.insample_refresh_tol
+        if self._rt_drift > tol * (abs(self._rt_over_err) + 1.0) or self._seg_drift > tol * (
+            float(np.max(np.abs(self._seg_under_err))) + 1.0
+        ):
+            self._refresh_insample(rt_fit, seg_fit)
+
+    def _refresh_insample(self, rt_fit, seg_fit) -> None:
+        """Exact O(n) rescan of the residual extremes under the current fit."""
+        n = self._n_obs
+        hu = self._hist_u[:n]
+        rt_res = (rt_fit[0] + rt_fit[1] * hu) - self._hist_rt[:n]
+        self._rt_over_err = float(rt_res.max())  # largest runtime overprediction
+        seg_pred = seg_fit[0][None, :] + seg_fit[1][None, :] * hu[:, None]
+        self._seg_under_err = np.max(self._hist_peaks[:n] - seg_pred, axis=0)
+        self._ref_fits = (rt_fit, seg_fit)
+        self._rt_drift = self._seg_drift = 0.0
 
     # -- prediction ---------------------------------------------------------
 
     def predict_runtime(self, input_size: float) -> float:
         """Offset (under-)predicted runtime, floored at one interval."""
         raw = float(regression.predict_np(self._rt_stats, float(input_size) - self._x0))
-        return max(raw - max(self._rt_over_err, 0.0), self.config.interval_s)
+        # + drift: a possibly-stale insample extreme stays conservative.
+        return max(raw - max(self._rt_over_err + self._rt_drift, 0.0), self.config.interval_s)
 
     def predict(self, input_size: float) -> StepAllocation:
         """Paper Sec. III-C: the monotone k-step allocation for a new run."""
@@ -137,7 +212,7 @@ class KSegmentsModel:
         v = np.asarray(
             regression.predict_np(self._seg_stats, float(input_size) - self._x0), dtype=np.float64
         )
-        v = v + np.maximum(self._seg_under_err, 0.0)
+        v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)
         if v[0] < 0:  # paper: negative first prediction -> 100 MB default
             v[0] = cfg.floor_mib
         v = np.maximum.accumulate(v)  # monotone: v_s := max(v_s, v_{s-1})

@@ -29,11 +29,25 @@ METHODS = (
 
 
 class AllocationMethod(Protocol):
-    """What the scheduler needs from any predictor."""
+    """What the scheduler needs from any predictor.
+
+    ``observe`` accepts optional precomputed features of the series (its
+    global peak, sample count, and k-segment peaks) so grid evaluators can
+    derive them once per trace instead of once per (method, fraction) cell;
+    every implementation recomputes whatever it needs when they are omitted.
+    """
 
     def predict(self, input_size: float) -> StepAllocation: ...
 
-    def observe(self, input_size: float, series_mib: np.ndarray) -> None: ...
+    def observe(
+        self,
+        input_size: float,
+        series_mib: np.ndarray,
+        *,
+        peak: float | None = None,
+        n_samples: float | None = None,
+        peaks: np.ndarray | None = None,
+    ) -> None: ...
 
     def on_failure(
         self, alloc: StepAllocation, failed_segment: int, node_cap_mib: float
@@ -52,8 +66,8 @@ class KSegmentsMethod:
             return StepAllocation(np.asarray([1.0]), np.asarray([self.default_mib]))
         return self.model.predict(input_size)
 
-    def observe(self, input_size: float, series_mib: np.ndarray) -> None:
-        self.model.observe(input_size, series_mib)
+    def observe(self, input_size, series_mib, *, peak=None, n_samples=None, peaks=None) -> None:
+        self.model.observe(input_size, series_mib, peaks=peaks)
 
     def on_failure(self, alloc, failed_segment, node_cap_mib):
         cfg = self.model.config
@@ -71,8 +85,8 @@ class _StaticAdapter:
     def predict(self, input_size):
         return self.baseline.predict(input_size)
 
-    def observe(self, input_size, series_mib):
-        self.baseline.observe(input_size, series_mib)
+    def observe(self, input_size, series_mib, *, peak=None, n_samples=None, peaks=None):
+        self.baseline.observe(input_size, series_mib, peak=peak, n_samples=n_samples)
 
     def on_failure(self, alloc, failed_segment, node_cap_mib):
         return self.baseline.on_failure(alloc, node_cap_mib)

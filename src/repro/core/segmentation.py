@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 _NEG = -jnp.inf
 
@@ -53,21 +54,44 @@ def segment_peaks(y: jnp.ndarray, lengths, k: int) -> jnp.ndarray:
       (B, k) segment peak matrix; empty segments carry the previous segment's
       peak (first segment of an empty series would be 0, but lengths >= 1).
     """
+    return segment_peaks_dynamic(y, lengths, k, k)
+
+
+def segment_peaks_dynamic(y: jnp.ndarray, lengths, k_eff, k_max: int) -> jnp.ndarray:
+    """``segment_peaks`` with a *traced* segment count.
+
+    ``k_eff`` (scalar, 1 <= k_eff <= k_max) is the paper's k but carried as a
+    traced value so a k-sweep (Fig. 8) can ``vmap`` over it instead of
+    recompiling per k.  The output is padded to ``(B, k_max)``: segments
+    ``s >= k_eff`` are empty and forward-fill, i.e. they replicate the last
+    real segment's peak.  Downstream regression banks then learn identical
+    replicas, which keeps every (k_max,)-shaped computation exact w.r.t. the
+    true k_eff-segment model.
+    """
     y = jnp.asarray(y)
     if y.ndim == 1:
-        return segment_peaks(y[None], jnp.asarray(lengths)[None], k)[0]
+        return segment_peaks_dynamic(y[None], jnp.asarray(lengths)[None], k_eff, k_max)[0]
     B, T = y.shape
     lengths = jnp.asarray(lengths)
-    starts, ends = segment_bounds(lengths, k)  # (B, k)
-    pos = jnp.arange(T)[None, None, :]  # (1, 1, T)
-    mask = (pos >= starts[..., None]) & (pos < ends[..., None])  # (B, k, T)
-    peaks = jnp.max(jnp.where(mask, y[:, None, :], _NEG), axis=-1)  # (B, k)
-    # Empty segments (start == end) inherit the PREVIOUS segment's peak
-    # (forward fill — not the running max; a falling series must not have an
-    # empty tail report the global maximum).
+    k_eff = jnp.asarray(k_eff, jnp.int32)
+    i = jnp.maximum(lengths // jnp.maximum(k_eff, 1), 1)  # (B,) or scalar
+    i = jnp.broadcast_to(i, (B,))
+    s = jnp.arange(k_max)
+    real = s[None, :] < k_eff  # (1|B, k_max)
+    starts = jnp.where(real, jnp.minimum(s[None, :] * i[:, None], lengths[:, None]), lengths[:, None])
+    last = s[None, :] == (k_eff - 1)
+    ends = jnp.where(
+        last,
+        lengths[:, None],
+        jnp.where(real, jnp.minimum((s[None, :] + 1) * i[:, None], lengths[:, None]), lengths[:, None]),
+    )
+    ends = jnp.maximum(ends, starts)
+    pos = jnp.arange(T)[None, None, :]
+    mask = (pos >= starts[..., None]) & (pos < ends[..., None])  # (B, k_max, T)
+    peaks = jnp.max(jnp.where(mask, y[:, None, :], _NEG), axis=-1)
     has = jnp.isfinite(peaks)
-    pos = jnp.arange(k)[None, :]
-    last_idx = jnp.maximum.accumulate(jnp.where(has, pos, -1), axis=-1)
+    sp = jnp.arange(k_max)[None, :]
+    last_idx = lax.cummax(jnp.where(has, sp, -1), axis=1)
     filled = jnp.take_along_axis(peaks, jnp.maximum(last_idx, 0), axis=-1)
     peaks = jnp.where(has, peaks, filled)
     return jnp.where(jnp.isfinite(peaks), peaks, 0.0)

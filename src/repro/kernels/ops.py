@@ -9,6 +9,7 @@ code with ``interpret=False``.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,16 @@ MIB_PER_GIB = 1024.0
 
 
 def _use_interpret() -> bool:
+    """Backend selection for the Pallas kernels.
+
+    ``REPRO_PALLAS_INTERPRET=1|0`` overrides; otherwise interpret mode is the
+    default everywhere except on a real TPU (where the compiled lowering
+    runs).  Resolved outside the jitted wrappers on every call, so flipping
+    the env var mid-process retraces through the static ``interpret`` arg.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
     return jax.default_backend() != "tpu"
 
 
@@ -41,14 +52,21 @@ def _pad_cols(a: jax.Array, mult: int, fill=0):
     return jnp.pad(a, [(0, 0), (0, pad)], constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def segment_peaks(y: jax.Array, lengths: jax.Array, k: int, *, interpret: bool | None = None) -> jax.Array:
     """(B, T) padded series + (B,) lengths -> (B, k) segment peaks.
 
     Matches ``core.segmentation.segment_peaks`` (the jnp oracle): empty
     segments inherit the running peak from the left.
     """
+    # Resolve the backend OUTSIDE the jit so the env override participates in
+    # the cache key (resolving inside the traced body would pin the first
+    # call's choice forever).
     interpret = _use_interpret() if interpret is None else interpret
+    return _segment_peaks_jit(y, lengths, k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _segment_peaks_jit(y: jax.Array, lengths: jax.Array, k: int, *, interpret: bool) -> jax.Array:
     B = y.shape[0]
     yp = _pad_cols(_pad_rows(y, _segmax.BLOCK_B), _segmax.BLOCK_T)
     lp = _pad_rows(jnp.maximum(lengths, 1), _segmax.BLOCK_B, fill=1)
@@ -57,26 +75,29 @@ def segment_peaks(y: jax.Array, lengths: jax.Array, k: int, *, interpret: bool |
     # peak (matching core.segmentation semantics)
     neg = peaks <= jnp.float32(-1.0e38)
     pos = jnp.arange(k)[None, :]
-    last_idx = jnp.maximum.accumulate(jnp.where(~neg, pos, -1), axis=-1)
+    last_idx = jax.lax.cummax(jnp.where(~neg, pos, -1), axis=1)
     filled = jnp.take_along_axis(peaks, jnp.maximum(last_idx, 0), axis=-1)
     out = jnp.where(neg, filled, peaks)
     return jnp.where(out <= jnp.float32(-1.0e38), 0.0, out)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def fit_stats(x: jax.Array, peaks: jax.Array, valid: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     """(B,) inputs + (B, k) segment peaks + (B,) mask -> (k, 5) OLS bank.
 
     ``x`` should be pre-shifted (u = x - x0) for f32 conditioning.
     """
     interpret = _use_interpret() if interpret is None else interpret
+    return _fit_stats_jit(x, peaks, valid, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fit_stats_jit(x: jax.Array, peaks: jax.Array, valid: jax.Array, *, interpret: bool) -> jax.Array:
     xp = _pad_rows(x.reshape(-1), _fitstats.BLOCK_B)
     pp = _pad_rows(peaks, _fitstats.BLOCK_B)
     vp = _pad_rows(valid.astype(jnp.float32).reshape(-1), _fitstats.BLOCK_B)
     return _fitstats.fitstats_pallas(xp, pp, vp, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interval_s", "interpret"))
 def attempt_wastage(
     y: jax.Array,
     lengths: jax.Array,
@@ -91,6 +112,19 @@ def attempt_wastage(
     Matches ``core.allocation.attempt_outcomes_batch`` / ``score_attempt_np``.
     """
     interpret = _use_interpret() if interpret is None else interpret
+    return _attempt_wastage_jit(y, lengths, bounds, values, interval_s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interval_s", "interpret"))
+def _attempt_wastage_jit(
+    y: jax.Array,
+    lengths: jax.Array,
+    bounds: jax.Array,
+    values: jax.Array,
+    interval_s: float,
+    *,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
     B = y.shape[0]
     yp = _pad_cols(_pad_rows(y, _wastage.BLOCK_B), _wastage.BLOCK_T)
     lp = _pad_rows(jnp.maximum(lengths, 0), _wastage.BLOCK_B)

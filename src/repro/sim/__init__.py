@@ -1,17 +1,28 @@
 # Workflow/cluster simulation substrate: synthetic nf-core-like traces
 # (calibrated to the paper's eager/sarek statistics), the online learning
-# simulator reproducing the paper's evaluation protocol, and a fast
-# lax.scan-based batch simulator.
-from repro.sim.traces import Execution, TaskTrace, WorkflowTrace, generate_eager, generate_sarek, generate_suite
+# simulator reproducing the paper's evaluation protocol, and the batched
+# lax.scan evaluation engine that runs the whole grid as device programs.
+from repro.sim.traces import (
+    Execution,
+    PaddedTaskBatch,
+    TaskTrace,
+    WorkflowTrace,
+    generate_eager,
+    generate_sarek,
+    generate_suite,
+    pack_traces,
+)
 from repro.sim.simulator import SimConfig, TaskResult, run_execution, simulate_suite, simulate_task
 
 __all__ = [
     "Execution",
+    "PaddedTaskBatch",
     "TaskTrace",
     "WorkflowTrace",
     "generate_eager",
     "generate_sarek",
     "generate_suite",
+    "pack_traces",
     "SimConfig",
     "TaskResult",
     "run_execution",

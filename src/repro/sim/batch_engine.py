@@ -1,0 +1,169 @@
+"""Batched evaluation engine: the paper's whole fig7 grid as device programs.
+
+``simulator.simulate_suite`` walks the (task type x method x training
+fraction) grid as a 4-deep Python loop — one ``simulate_task`` call per cell,
+each dispatching numpy per execution.  This engine evaluates the same grid as
+a handful of device dispatches:
+
+1. The corpus is packed once into bucket-padded ``(L, B, T)`` batches
+   (``traces.pack_traces``), bounding padding waste and compiled-shape count.
+2. Each bucket runs ``jax_sim.simulate_task_methods`` vmapped over lanes: one
+   multi-method ``lax.scan`` per lane scores every method on every execution.
+3. Training fractions are pure aggregation: the model-state trajectory does
+   not depend on where the train/test split falls (see jax_sim module
+   docstring), so each fraction is a host-side slice of the same per-execution
+   outcomes — the fraction axis is free.
+
+The sequential simulator stays the cross-check oracle: with
+``error_mode="progressive"`` both engines agree per execution (see
+tests/test_batch_engine.py).  Differences to the oracle elsewhere:
+
+* k-Segments offsets are progressive, not the ``SimConfig`` default insample
+  (a bounded scan carry cannot refit over unbounded history).
+* PPM considers every observed peak as a candidate instead of capping at
+  ``TovarPPM.MAX_CANDIDATES`` quantiles (matters only past 256 distinct
+  peaks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.jax_sim import ENGINE_METHODS, simulate_task_methods
+from repro.sim.simulator import SimConfig, TaskResult
+from repro.sim.traces import TaskTrace, WorkflowTrace, pack_traces
+
+GRID_METHODS = tuple(m for m in ENGINE_METHODS if m != "witt-lr-max")
+
+
+@functools.lru_cache(maxsize=None)
+def _lane_batched(methods: tuple[str, ...], k: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float):
+    """Compiled (lanes-vmapped) engine for one static configuration."""
+    f = functools.partial(
+        simulate_task_methods,
+        methods=methods,
+        k=k,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
+    )
+    return jax.jit(jax.vmap(f, in_axes=(0, 0, 0, 0, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def _ksweep_batched(method: str, k_max: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float):
+    """Compiled engine vmapped over the traced segment count (fig8)."""
+    f = functools.partial(
+        simulate_task_methods,
+        methods=(method,),
+        k=k_max,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
+    )
+    return jax.jit(jax.vmap(f, in_axes=(None, None, None, None, 0)))
+
+
+def _check_methods(methods) -> tuple[str, ...]:
+    unknown = [m for m in methods if m not in ENGINE_METHODS]
+    if unknown:
+        raise ValueError(f"batch engine does not implement {unknown!r}; available: {ENGINE_METHODS}")
+    return tuple(methods)
+
+
+def simulate_grid(
+    workflows: list[WorkflowTrace],
+    methods: tuple[str, ...] = GRID_METHODS,
+    train_fracs: tuple[float, ...] = (0.25, 0.5, 0.75),
+    cfg: SimConfig | None = None,
+) -> list[TaskResult]:
+    """Batched twin of ``simulator.simulate_suite``: same grid, same
+    ``TaskResult`` rows (ordered workflow -> task -> fraction -> method), but
+    every (method x fraction) cell of a task comes from one scan pass."""
+    cfg = cfg or SimConfig()
+    methods = _check_methods(methods)
+    kcfg = cfg.ksegments
+    fn = _lane_batched(methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib)
+
+    per_task: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    tasks = [t for wf in workflows for t in wf.eligible_tasks(cfg.min_executions)]
+    for batch in pack_traces(tasks):
+        waste, retries = fn(
+            jnp.asarray(batch.x),
+            jnp.asarray(batch.y),
+            jnp.asarray(batch.lengths),
+            jnp.asarray(batch.default_mib, jnp.float32),
+            jnp.asarray(kcfg.k, jnp.int32),
+        )
+        waste = np.asarray(waste, dtype=np.float64)  # (L, M, B)
+        retries = np.asarray(retries)
+        for li, trace in enumerate(batch.tasks):
+            n = int(batch.n_execs[li])
+            per_task[id(trace)] = (waste[li, :, :n], retries[li, :, :n])
+
+    results = []
+    for wf in workflows:
+        for trace in wf.eligible_tasks(cfg.min_executions):
+            w, r = per_task[id(trace)]
+            n = trace.n_executions
+            for frac in train_fracs:
+                n_train = int(n * frac)
+                for mi, m in enumerate(methods):
+                    results.append(
+                        TaskResult(
+                            task=trace.name,
+                            workflow=trace.workflow,
+                            method=m,
+                            train_frac=frac,
+                            n_train=n_train,
+                            n_test=n - n_train,
+                            wastage_gib_s=w[mi, n_train:],
+                            retries=r[mi, n_train:],
+                        )
+                    )
+    return results
+
+
+def simulate_ksweep(
+    trace: TaskTrace,
+    ks: tuple[int, ...],
+    train_frac: float = 0.5,
+    cfg: SimConfig | None = None,
+    method: str = "ksegments-selective",
+) -> dict[int, TaskResult]:
+    """Fig. 8: one task's wastage as a function of k, as a single vmap over
+    the traced segment count (static shapes sized by max(ks))."""
+    cfg = cfg or SimConfig()
+    kcfg = cfg.ksegments
+    fn = _ksweep_batched(method, max(ks), kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib)
+    x, y, lengths = trace.padded()
+    waste, retries = fn(
+        jnp.asarray(x),
+        jnp.asarray(y),
+        jnp.asarray(lengths),
+        jnp.asarray(trace.default_mib, jnp.float32),
+        jnp.asarray(list(ks), jnp.int32),
+    )
+    waste = np.asarray(waste, dtype=np.float64)  # (K, 1, B)
+    retries = np.asarray(retries)
+    n = trace.n_executions
+    n_train = int(n * train_frac)
+    return {
+        kv: TaskResult(
+            task=trace.name,
+            workflow=trace.workflow,
+            method=method,
+            train_frac=train_frac,
+            n_train=n_train,
+            n_test=n - n_train,
+            wastage_gib_s=waste[ki, 0, n_train:],
+            retries=retries[ki, 0, n_train:],
+        )
+        for ki, kv in enumerate(ks)
+    }

@@ -1,18 +1,39 @@
-"""Fully-JAX online simulator: the paper's whole evaluation loop as one
-``lax.scan``.
+"""Fully-JAX online simulator: the paper's evaluation loop as device programs.
 
-The sequential Python simulator (simulator.py) is the reference; this version
-expresses the *online recurrence* natively: the scan carry is exactly the
-k-Segments sufficient-statistic state (KSegmentsModel.state()), each scan step
-is one task execution — predict, replay-with-retries (a bounded
-``lax.while_loop``), observe — and the whole test stream evaluates in one jit.
+The sequential Python simulator (simulator.py) is the reference oracle; this
+module expresses the *online recurrence* natively so whole tasks — and, via
+``repro.sim.batch_engine``, the whole fig7 grid — evaluate as a handful of
+device dispatches instead of ~10^4 Python-level calls.
+
+Architecture of ``simulate_task_methods`` (the multi-method engine):
+
+* One ``lax.scan`` walks a task's executions in order.  The scan carry holds
+  the method state that is a true sufficient-statistic recurrence: the
+  k-Segments runtime/segment regression banks and their progressive error
+  offsets (exactly ``KSegmentsModel.state()``).
+* Method state that no bounded carry can hold — PPM's full empirical peak
+  distribution, and Witt-LR's residual extremes under a continually *refitted*
+  model — depends only on the observation prefix, never on replay outcomes.
+  Those predictions are therefore evaluated for **all** steps up front as
+  batched prefix programs (masked prefix cumsums / one pairwise matmul) and
+  fed to the scan as per-step inputs.  Same math, no sequential dependency.
+* Each scan step replays the execution against **every** method at once: the
+  allocations form an (M, k) matrix (the k = 1 baselines broadcast with +inf
+  boundaries) and a single bounded ``lax.while_loop`` advances all retry
+  ladders together, with per-method retry modes (selective / partial bump,
+  node-cap jump) selected branch-free.
+
+Because training executions and test executions are observed identically, the
+model-state trajectory is independent of the training fraction: execution i is
+always scored against the prediction from executions [0, i) (the default
+allocation at i = 0).  A training fraction is therefore *pure aggregation* —
+callers slice the per-execution outputs at ``n_train`` — and the fig7a/b/c
+fraction axis costs nothing extra on device.
+
 Offsets use the O(1) "progressive" error mode (the insample mode needs O(n)
-history, which a scan carry cannot hold); the cross-check test runs the
-Python model in the same mode.
-
-On corpus-scale batches this is the throughput path (one device dispatch per
-task type instead of one per execution), and its inner reductions are the
-same computations the Pallas kernels implement for TPU.
+refit history); cross-check tests run the Python engine in the same mode.
+The segment count ``k_eff`` is traced (static upper bound ``k``), so the fig8
+k-sweep is a ``vmap`` over k instead of one compile per k.
 """
 
 from __future__ import annotations
@@ -23,20 +44,46 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import regression
-from repro.core.segmentation import segment_bounds, segment_peaks
+from repro.core.segmentation import segment_peaks_dynamic
 
 MIB_PER_GIB = 1024.0
 MAX_RETRIES = 64
 
+# Method rows the multi-method scan can score, in output-row order.
+ENGINE_METHODS = (
+    "default",
+    "witt-lr",
+    "witt-lr-max",
+    "ppm",
+    "ppm-improved",
+    "ksegments-selective",
+    "ksegments-partial",
+)
+# Retry policy per row: "cap" jumps to the node maximum (original PPM); every
+# other method multiplies by the retry factor — only the failed segment for
+# selective, the failed segment onward for partial.  For the k = 1 baselines
+# the two coincide (the whole allocation doubles), so they ride "selective".
+_SELECTIVE = {m: m != "ksegments-partial" for m in ENGINE_METHODS}
+_CAP_JUMP = {m: m == "ppm" for m in ENGINE_METHODS}
 
-def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, interval_s: float, floor_mib: float):
-    """jnp twin of KSegmentsModel.predict (progressive offsets)."""
+
+def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval_s: float, floor_mib: float):
+    """jnp twin of KSegmentsModel.predict (progressive offsets).
+
+    ``k`` is the static array size; ``k_eff <= k`` is the traced number of
+    live segments.  Segments beyond ``k_eff`` are replicas of the last real
+    one (their stats learned replicated peaks, see segment_peaks_dynamic) and
+    get +inf boundaries, so they act as the hold-last-value overflow region.
+    """
     r_e = regression.predict(rt_stats, u) - jnp.maximum(rt_over, 0.0)
     r_e = jnp.maximum(r_e, interval_s)
-    bounds = jnp.arange(1, k + 1, dtype=jnp.float32) * (r_e / k)
+    s = jnp.arange(k)
+    bounds = (s + 1).astype(jnp.float32) * (r_e / k_eff.astype(jnp.float32))
+    bounds = jnp.where(s == k_eff - 1, r_e, bounds)  # exact last edge, as the Python model
+    bounds = jnp.where(s >= k_eff, jnp.inf, bounds)
     v = regression.predict(seg_stats, u) + jnp.maximum(seg_under, 0.0)
     v = v.at[0].set(jnp.where(v[0] < 0, floor_mib, v[0]))
-    v = jax.lax.associative_scan(jnp.maximum, v)
+    v = jax.lax.cummax(v, axis=0)
     return bounds, jnp.maximum(v, floor_mib)
 
 
@@ -57,67 +104,224 @@ def _attempt(y, length, interval_s, bounds, values):
     return failed, fail_idx, waste
 
 
-def _replay(y, length, bounds, values, *, interval_s, selective: bool, factor: float, cap_mib: float):
-    """Retry loop: returns (total wastage, retries, final values)."""
+def _replay_multi(y, length, bounds, values, selective, capjump, k_eff, *, interval_s, factor, cap_mib):
+    """Shared retry loop for all methods: one bounded while_loop advances every
+    method's retry ladder together (finished rows hold their state).
+
+    Args: y (T,), length scalar, bounds/values (M, k), selective/capjump (M,)
+    per-method retry-mode flags.  Returns (waste (M,), retries (M,)).
+    """
+    M, k = values.shape
+    seg_pos = jnp.arange(k)[None, :]
+
+    def attempt_all(vals):
+        return jax.vmap(lambda b, v: _attempt(y, length, interval_s, b, v))(bounds, vals)
 
     def cond(c):
-        done, retries, *_ = c
-        return (~done) & (retries <= MAX_RETRIES)
+        done, *_ = c
+        return jnp.any(~done)
 
     def body(c):
         done, retries, waste, vals = c
-        failed, fail_idx, w = _attempt(y, length, interval_s, bounds, vals)
-        waste = waste + w
+        failed, fail_idx, w = attempt_all(vals)
+        active = ~done
+        waste = waste + jnp.where(active, w, 0.0)
         t_fail = (fail_idx.astype(jnp.float32) + 0.5) * interval_s
-        seg = jnp.minimum(jnp.sum(t_fail > bounds), len(vals) - 1)
-        if selective:
-            new_vals = vals.at[seg].multiply(factor)
-        else:
-            new_vals = jnp.where(jnp.arange(len(vals)) >= seg, vals * factor, vals)
-        new_vals = jnp.minimum(jax.lax.associative_scan(jnp.maximum, new_vals), cap_mib)
-        return (~failed, retries + jnp.where(failed, 1, 0), waste, jnp.where(failed, new_vals, vals))
+        seg = jnp.minimum(jnp.sum(t_fail[:, None] > bounds, axis=1), k_eff - 1)  # (M,)
+        bump_sel = vals * jnp.where(seg_pos == seg[:, None], factor, 1.0)
+        bump_par = jnp.where(seg_pos >= seg[:, None], vals * factor, vals)
+        bumped = jnp.where(capjump[:, None], cap_mib, jnp.where(selective[:, None], bump_sel, bump_par))
+        bumped = jnp.minimum(jax.lax.cummax(bumped, axis=1), cap_mib)
+        step_fail = active & failed
+        retries = retries + step_fail.astype(jnp.int32)
+        vals = jnp.where(step_fail[:, None], bumped, vals)
+        done = done | (active & ~failed) | (retries > MAX_RETRIES)
+        return done, retries, waste, vals
 
-    done, retries, waste, _ = jax.lax.while_loop(
-        cond, body, (jnp.asarray(False), jnp.asarray(0), jnp.asarray(0.0, jnp.float32), jnp.minimum(values, cap_mib))
+    _, retries, waste, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (
+            jnp.zeros((M,), bool),
+            jnp.zeros((M,), jnp.int32),
+            jnp.zeros((M,), jnp.float32),
+            jnp.minimum(values, cap_mib),
+        ),
     )
     return waste, retries
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interval_s", "selective", "factor", "floor_mib", "cap_mib", "n_train"))
-def simulate_task_scan(
+# ---------------------------------------------------------------------------
+# Prefix programs: per-step predictions for the methods whose state cannot
+# live in a bounded scan carry.  Row i is always the model fitted on
+# observations j < i (row 0 = no history; the scan substitutes the default).
+# ---------------------------------------------------------------------------
+
+
+def _witt_prefix_values(u, gpeak, floor_mib):
+    """Witt-LR allocation values for every step as one prefix program.
+
+    Returns (val_std, val_max): (B,) predictions for the "std" and "max"
+    residual-offset variants.  The residual matrix e[i, j] is the step-i fit's
+    error on historical execution j — the exact quantity WittLR._offset_value
+    recomputes per prediction, here built once for all steps.
+    """
+    B = u.shape[0]
+    upd = regression.update_stats(jnp.zeros((B, regression.NUM_STATS), jnp.float32), u, gpeak)
+    pref = jnp.concatenate([jnp.zeros((1, regression.NUM_STATS), jnp.float32), jnp.cumsum(upd, axis=0)[:-1]], axis=0)
+    intercept, slope = regression.fit(pref)  # (B,) step-i fits
+    e = gpeak[None, :] - intercept[:, None] - slope[:, None] * u[None, :]  # (B, B)
+    seen = jnp.arange(B)[None, :] < jnp.arange(B)[:, None]
+    n = jnp.maximum(jnp.sum(seen, axis=1), 1).astype(jnp.float32)
+    mean = jnp.sum(jnp.where(seen, e, 0.0), axis=1) / n
+    var = jnp.sum(jnp.where(seen, e * e, 0.0), axis=1) / n - mean * mean
+    std = jnp.where(jnp.arange(B) >= 2, jnp.sqrt(jnp.maximum(var, 0.0)), 0.0)  # Witt: >= 2 residuals
+    emax = jnp.max(jnp.where(seen, e, -jnp.inf), axis=1)
+    off_max = jnp.maximum(jnp.where(jnp.isfinite(emax), emax, 0.0), 0.0)
+    base = intercept + slope * u
+    return jnp.maximum(base + std, floor_mib), jnp.maximum(base + off_max, floor_mib)
+
+
+def _ppm_prefix_values(gpeak, rt_samples, cap_mib, floor_mib):
+    """Tovar PPM candidate selection for every observation prefix.
+
+    Sort the peaks once; at step i a sorted position m is a candidate iff its
+    execution was observed before i, and the expected-wastage terms are masked
+    prefix cumsums — so all B selections evaluate together.  PPM-improved's
+    doubling-ladder cost decomposes per (candidate, peak) pair into a matrix
+    computed once and contracted against the prefix mask with one matmul.
+
+    Unlike TovarPPM.MAX_CANDIDATES, every observed peak is a candidate (no
+    quantile subsetting); the two engines can differ once a task has > 256
+    distinct peaks, which the parity tests stay below.
+
+    Returns (val_orig, val_improved): (B,) allocation values.
+    """
+    B = gpeak.shape[0]
+    order = jnp.argsort(gpeak)
+    p = gpeak[order]  # sorted candidate/peak values
+    rt = rt_samples[order]
+    seen = order[None, :] < jnp.arange(B)[:, None]  # (B_steps, B_sorted)
+    seen_f = seen.astype(jnp.float32)
+    C = jnp.cumsum(seen_f * rt[None, :], axis=1)  # masked prefix runtime sums
+    S = jnp.cumsum(seen_f * (p * rt)[None, :], axis=1)
+    waste_ok = p[None, :] * C - S  # successes: (q - p_i) * rt_i
+    rt_bad = C[:, -1:] - C
+    s_bad = S[:, -1:] - S
+    # original: failed first attempt wastes q*rt; retry at node cap wastes (cap - p)*rt
+    waste_orig = waste_ok + p[None, :] * rt_bad + cap_mib * rt_bad - s_bad
+    # improved: smallest ladder level a = q * 2^ceil(log2(p/q)) >= p (capped)
+    # wastes (2a - q - p) * rt — the failed geometric attempts + final overshoot.
+    q = jnp.maximum(p, 1e-6)[:, None]
+    ratio = p[None, :] / q
+    a = jnp.minimum(q * jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(ratio, 1.0)))), cap_mib)
+    w_pair = jnp.where(p[None, :] > p[:, None], (2.0 * a - p[:, None] - p[None, :]) * rt[None, :], 0.0)
+    # contracting w_pair against the prefix mask is not a matmul: step i adds
+    # exactly execution i-1's column, so the whole (step, candidate) table is
+    # an exclusive cumsum of columns gathered into execution order — O(B^2).
+    contrib = w_pair[:, jnp.argsort(order)].T  # (B_exec, B_cand)
+    waste_imp = waste_ok + jnp.concatenate(
+        [jnp.zeros((1, B), jnp.float32), jnp.cumsum(contrib, axis=0)[:-1]], axis=0
+    )
+    val_orig = p[jnp.argmin(jnp.where(seen, waste_orig, jnp.inf), axis=1)]
+    val_imp = p[jnp.argmin(jnp.where(seen, waste_imp, jnp.inf), axis=1)]
+    return jnp.maximum(val_orig, floor_mib), jnp.maximum(val_imp, floor_mib)
+
+
+# ---------------------------------------------------------------------------
+# The multi-method engine.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib")
+)
+def simulate_task_methods(
     x,
     y,
     lengths,
+    default_mib,
+    k_eff=None,
     *,
+    methods: tuple[str, ...] = ENGINE_METHODS,
     k: int = 4,
     interval_s: float = 2.0,
-    selective: bool = True,
     factor: float = 2.0,
     floor_mib: float = 100.0,
     cap_mib: float = 128 * 1024.0,
-    n_train: int = 0,
 ):
-    """Online k-Segments over one task type's padded executions.
+    """Score every requested method on one task type's executions in one scan.
 
-    Args: x (B,) input sizes, y (B, T) padded MiB series, lengths (B,).
-    Returns (wastage (B,), retries (B,)) — zeros for the training prefix.
+    Args: x (B,) input sizes, y (B, T) padded MiB series, lengths (B,),
+      default_mib scalar (the workflow's static directive), k_eff traced
+      segment count (defaults to the static k).
+
+    Returns (waste, retries): (M, B) per-method, per-execution outcomes.
+    Execution i is scored against each method's prediction from executions
+    [0, i) — the default allocation at i = 0 — so any training fraction is a
+    pure slice at ``n_train`` over the B axis (see module docstring).
+    Executions past a caller's valid count must sit at the tail; their
+    updates only ever feed later (also-invalid) rows.
     """
     B, T = y.shape
+    y = y.astype(jnp.float32)
+    lengths = jnp.asarray(lengths, jnp.int32)
     u = (x - x[0]).astype(jnp.float32)  # conditioning shift (see regression.py)
-    peaks_all = segment_peaks(y, lengths, k)  # (B, k) — the segmax kernel's job
-    bounds_s, ends_s = segment_bounds(lengths, k)
+    default_mib = jnp.asarray(default_mib, jnp.float32)
+    k_eff = jnp.asarray(k if k_eff is None else k_eff, jnp.int32)
+
+    peaks_all = segment_peaks_dynamic(y, lengths, k_eff, k)  # (B, k) — the segmax kernel's job
+    gpeak = jnp.max(jnp.where(jnp.arange(T)[None, :] < lengths[:, None], y, 0.0), axis=1)
+
+    need = set(methods)
+    zeros = jnp.zeros((B,), jnp.float32)
+    witt_std, witt_max = (
+        _witt_prefix_values(u, gpeak, floor_mib) if need & {"witt-lr", "witt-lr-max"} else (zeros, zeros)
+    )
+    ppm_orig, ppm_imp = (
+        _ppm_prefix_values(gpeak, lengths.astype(jnp.float32), cap_mib, floor_mib)
+        if need & {"ppm", "ppm-improved"}
+        else (zeros, zeros)
+    )
+
+    sel_flags = jnp.asarray([_SELECTIVE[m] for m in methods])
+    cap_flags = jnp.asarray([_CAP_JUMP[m] for m in methods])
+    inf_bounds = jnp.full((k,), jnp.inf, jnp.float32)
+    ones_k = jnp.ones((k,), jnp.float32)
+    need_ks = bool(need & {"ksegments-selective", "ksegments-partial"})
 
     def step(carry, inp):
         rt_stats, rt_over, seg_stats, seg_under, i = carry
-        ui, yi, li, peaks_i = inp
+        ui, yi, li, peaks_i, vals_i = inp
+        has_obs = i >= 1
 
-        can_predict = i >= max(n_train, 1)
-        bounds, values = _predict(rt_stats, rt_over, seg_stats, seg_under, ui, k, interval_s, floor_mib)
-        waste, retries = _replay(
-            yi, li, bounds, values, interval_s=interval_s, selective=selective, factor=factor, cap_mib=cap_mib
+        if need_ks:
+            ks_bounds, ks_values = _predict(
+                rt_stats, rt_over, seg_stats, seg_under, ui, k, k_eff, interval_s, floor_mib
+            )
+        rows_b, rows_v = [], []
+        for m in methods:
+            if m.startswith("ksegments"):
+                rows_b.append(jnp.where(has_obs, ks_bounds, inf_bounds))
+                rows_v.append(jnp.where(has_obs, ks_values, default_mib * ones_k))
+            elif m == "default":
+                rows_b.append(inf_bounds)
+                rows_v.append(default_mib * ones_k)
+            else:
+                rows_b.append(inf_bounds)
+                rows_v.append(jnp.where(has_obs, vals_i[m], default_mib) * ones_k)
+        waste, retries = _replay_multi(
+            yi,
+            li,
+            jnp.stack(rows_b),
+            jnp.stack(rows_v),
+            sel_flags,
+            cap_flags,
+            k_eff,
+            interval_s=interval_s,
+            factor=factor,
+            cap_mib=cap_mib,
         )
-        waste = jnp.where(can_predict, waste, 0.0)
-        retries = jnp.where(can_predict, retries, 0)
 
         # observe (progressive offsets: score-then-update)
         runtime = li.astype(jnp.float32) * interval_s
@@ -137,5 +341,46 @@ def simulate_task_scan(
         jnp.zeros((k,), jnp.float32),
         jnp.asarray(0, jnp.int32),
     )
-    _, (waste, retries) = jax.lax.scan(step, init, (u, y.astype(jnp.float32), lengths.astype(jnp.int32), peaks_all))
-    return waste, retries
+    per_step_vals = {"witt-lr": witt_std, "witt-lr-max": witt_max, "ppm": ppm_orig, "ppm-improved": ppm_imp}
+    xs = (u, y, lengths, peaks_all, per_step_vals)
+    _, (waste, retries) = jax.lax.scan(step, init, xs)
+    return waste.T, retries.T  # (M, B)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "interval_s", "selective", "factor", "floor_mib", "cap_mib", "n_train")
+)
+def simulate_task_scan(
+    x,
+    y,
+    lengths,
+    *,
+    k: int = 4,
+    interval_s: float = 2.0,
+    selective: bool = True,
+    factor: float = 2.0,
+    floor_mib: float = 100.0,
+    cap_mib: float = 128 * 1024.0,
+    n_train: int = 0,
+):
+    """Online k-Segments over one task type's padded executions (single-method
+    wrapper around the multi-method engine; API kept for existing callers).
+
+    Args: x (B,) input sizes, y (B, T) padded MiB series, lengths (B,).
+    Returns (wastage (B,), retries (B,)) — zeros for the training prefix.
+    """
+    method = "ksegments-selective" if selective else "ksegments-partial"
+    waste, retries = simulate_task_methods(
+        x,
+        y,
+        lengths,
+        jnp.asarray(1024.0, jnp.float32),  # default alloc only matters pre-first-observation, which is masked below
+        methods=(method,),
+        k=k,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
+    )
+    scored = jnp.arange(y.shape[0]) >= max(n_train, 1)
+    return jnp.where(scored, waste[0], 0.0), jnp.where(scored, retries[0], 0)

@@ -21,9 +21,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.allocation import StepAllocation, score_attempt_np
+from repro.core.allocation import MIB_PER_GIB, StepAllocation
 from repro.core.ksegments import KSegmentsConfig
 from repro.core.predictor import AllocationMethod, make_method
+from repro.core.segmentation import segment_peaks_np
 from repro.sim.traces import TaskTrace, WorkflowTrace
 
 
@@ -63,21 +64,67 @@ def run_execution(
     node_cap_mib: float,
     max_retries: int = 64,
 ) -> tuple[float, int]:
-    """Replay one execution under a method's allocation + retry policy."""
+    """Replay one execution under a method's allocation + retry policy.
+
+    Retries do not re-score the series from t = 0: a retry bump only raises
+    values from the failed segment on (boundaries are unchanged and the
+    schedule stays pointwise >= its predecessor), so the allocation row is
+    recomputed only from the failed segment's start and the failure search
+    resumes at the previous failure index.  Wastage sums still run over the
+    same full slices of the same float64 row, so results are bit-identical
+    to attempt-from-scratch scoring.
+    """
+    y = np.asarray(series_mib, dtype=np.float64)
+    t = (np.arange(len(y)) + 0.5) * interval_s  # sample midpoints
     cur = StepAllocation(alloc.boundaries.copy(), np.minimum(alloc.values, node_cap_mib))
-    total, retries = 0.0, 0
+    a = cur.at(t)
+    total, retries, search_from = 0.0, 0, 0
     while True:
-        out = score_attempt_np(series_mib, interval_s, cur)
-        total += out.wastage_gib_s
-        if not out.failed:
+        over = y[search_from:] > a[search_from:]
+        if not over.any():
+            total += float(np.sum(a - y) * interval_s) / MIB_PER_GIB
             return total, retries
+        fi = search_from + int(np.argmax(over))
+        total += float(np.sum(a[: fi + 1]) * interval_s) / MIB_PER_GIB
         retries += 1
         if retries > max_retries:
             raise RuntimeError("allocation never satisfied the task (check node cap)")
-        t_fail = (out.failure_index + 0.5) * interval_s
-        seg = cur.segment_of(t_fail)
-        cur = method.on_failure(cur, seg, node_cap_mib)
-        cur = StepAllocation(cur.boundaries, np.minimum(cur.values, node_cap_mib))
+        seg = cur.segment_of((fi + 0.5) * interval_s)
+        nxt = method.on_failure(cur, seg, node_cap_mib)
+        nxt = StepAllocation(nxt.boundaries, np.minimum(nxt.values, node_cap_mib))
+        if np.array_equal(nxt.boundaries, cur.boundaries):
+            seg_start = 0.0 if seg == 0 else float(nxt.boundaries[seg - 1])
+            s0 = int(np.searchsorted(t, seg_start, side="left"))
+            a[s0:] = nxt.at(t[s0:])
+            search_from = fi
+        else:  # defensive: a custom method moved the boundaries — rescore fully
+            a = nxt.at(t)
+            search_from = 0
+        cur = nxt
+
+
+@dataclasses.dataclass
+class TraceFeatures:
+    """Per-execution observation features of one task trace.
+
+    Every (method x fraction) cell of the grid observes the same executions,
+    so the O(T) reductions — global peak, sample count, k-segment peaks —
+    are computed once per (trace, k) and shared across all cells instead of
+    being re-derived inside every ``observe`` call.
+    """
+
+    k: int
+    peaks: np.ndarray  # (B,) global peak per execution
+    n_samples: np.ndarray  # (B,) sample counts
+    seg_peaks: np.ndarray  # (B, k) segment peaks (paper Sec. III-B)
+
+
+def trace_features(trace: TaskTrace, k: int) -> TraceFeatures:
+    execs = trace.executions
+    peaks = np.asarray([float(np.asarray(e.series, dtype=np.float64).max()) for e in execs])
+    n_samples = np.asarray([float(len(e.series)) for e in execs])
+    seg_peaks = np.stack([segment_peaks_np(e.series, k) for e in execs]) if execs else np.zeros((0, k))
+    return TraceFeatures(k=k, peaks=peaks, n_samples=n_samples, seg_peaks=seg_peaks)
 
 
 def simulate_task(
@@ -85,21 +132,36 @@ def simulate_task(
     method_name: str,
     train_frac: float,
     cfg: SimConfig | None = None,
+    features: TraceFeatures | None = None,
 ) -> TaskResult:
     cfg = cfg or SimConfig()
+    if features is None or features.k != cfg.ksegments.k:
+        features = trace_features(trace, cfg.ksegments.k)
     method = make_method(method_name, trace.default_mib, cfg.node_cap_mib, cfg.ksegments)
     execs = trace.executions
+
+    def observe(i: int) -> None:
+        e = execs[i]
+        method.observe(
+            e.input_size,
+            e.series,
+            peak=float(features.peaks[i]),
+            n_samples=float(features.n_samples[i]),
+            peaks=features.seg_peaks[i],
+        )
+
     n_train = int(len(execs) * train_frac)
-    for e in execs[:n_train]:
-        method.observe(e.input_size, e.series)
+    for i in range(n_train):
+        observe(i)
 
     wastages, retries = [], []
-    for e in execs[n_train:]:
+    for i in range(n_train, len(execs)):
+        e = execs[i]
         alloc = method.predict(e.input_size)
         w, r = run_execution(e.series, trace.interval_s, alloc, method, cfg.node_cap_mib, cfg.max_retries)
         wastages.append(w)
         retries.append(r)
-        method.observe(e.input_size, e.series)  # online feedback loop
+        observe(i)  # online feedback loop
 
     return TaskResult(
         task=trace.name,
@@ -119,14 +181,20 @@ def simulate_suite(
     train_fracs: tuple[float, ...] = (0.25, 0.5, 0.75),
     cfg: SimConfig | None = None,
 ) -> list[TaskResult]:
-    """The full grid the paper reports: every eligible task x method x fraction."""
+    """The full grid the paper reports: every eligible task x method x fraction.
+
+    Observation features (segment peaks, global peaks, sample counts) are
+    computed once per trace and shared across the task's method x fraction
+    cells — they depend only on (trace, k), never on the method under test.
+    """
     cfg = cfg or SimConfig()
     results = []
     for wf in workflows:
         for trace in wf.eligible_tasks(cfg.min_executions):
+            features = trace_features(trace, cfg.ksegments.k)
             for frac in train_fracs:
                 for m in methods:
-                    results.append(simulate_task(trace, m, frac, cfg))
+                    results.append(simulate_task(trace, m, frac, cfg, features))
     return results
 
 
@@ -143,12 +211,13 @@ def fig7a_mean_wastage(results: list[TaskResult]) -> dict[tuple[str, float], flo
 
 def fig7b_lowest_counts(results: list[TaskResult]) -> dict[tuple[str, float], int]:
     """Per (method, frac): number of tasks where the method ties the lowest
-    mean wastage (ties all score, as in the paper)."""
-    by_task: dict[tuple[str, float], dict[str, float]] = {}
+    mean wastage (ties all score, as in the paper).  Tasks are identified by
+    (workflow, task) — task names can collide across workflows."""
+    by_task: dict[tuple[str, str, float], dict[str, float]] = {}
     for r in results:
-        by_task.setdefault((r.task, r.train_frac), {})[r.method] = r.mean_wastage
+        by_task.setdefault((r.workflow, r.task, r.train_frac), {})[r.method] = r.mean_wastage
     counts: dict[tuple[str, float], int] = {}
-    for (task, frac), per_method in by_task.items():
+    for (_wf, _task, frac), per_method in by_task.items():
         best = min(per_method.values())
         for m, w in per_method.items():
             counts.setdefault((m, frac), 0)

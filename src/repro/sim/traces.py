@@ -73,6 +73,67 @@ class TaskTrace:
         return x, y, lengths
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class PaddedTaskBatch:
+    """A bucket of task types padded to one (B, T) shape for vmapped engines.
+
+    Lanes are tasks; executions keep their original order so lane b's first
+    ``n_execs[b]`` rows are the real executions and the zero tail is inert
+    padding (the batch engine's online updates at padded rows can only feed
+    other padded rows).
+    """
+
+    tasks: list[TaskTrace]
+    x: np.ndarray  # (L, B) float64 input sizes
+    y: np.ndarray  # (L, B, T) float32 padded series
+    lengths: np.ndarray  # (L, B) int32 valid sample counts
+    n_execs: np.ndarray  # (L,) int32 valid execution counts
+    default_mib: np.ndarray  # (L,) float64 static directives
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return self.y.shape
+
+
+def pack_traces(tasks: list[TaskTrace]) -> list[PaddedTaskBatch]:
+    """Pack task types into bucket-padded batches.
+
+    Tasks are grouped by ``next_pow2(max_samples)`` — series length dominates
+    the memory of a padded batch — and each bucket pads executions to the
+    next multiple of 64 above its largest member (the scan walks the
+    execution axis, so padding it costs wall-clock, not just memory).  The
+    number of distinct compiled shapes stays logarithmic in the corpus
+    extremes; lanes sharing a bucket ride the same vmapped scan, whose
+    wall-clock the longest lane sets anyway.
+    """
+    buckets: dict[int, list[TaskTrace]] = {}
+    for t in tasks:
+        buckets.setdefault(_next_pow2(t.max_samples()), []).append(t)
+    batches = []
+    for T, group in sorted(buckets.items()):
+        L = len(group)
+        B = -(-max(t.n_executions for t in group) // 64) * 64
+        x = np.zeros((L, B), dtype=np.float64)
+        y = np.zeros((L, B, T), dtype=np.float32)
+        lengths = np.zeros((L, B), dtype=np.int32)
+        n_execs = np.zeros(L, dtype=np.int32)
+        defaults = np.zeros(L, dtype=np.float64)
+        for li, t in enumerate(group):
+            xb, yb, lb = t.padded()
+            n = t.n_executions
+            x[li, :n] = xb
+            y[li, :n, : yb.shape[1]] = yb
+            lengths[li, :n] = lb
+            n_execs[li] = n
+            defaults[li] = t.default_mib
+        batches.append(PaddedTaskBatch(group, x, y, lengths, n_execs, defaults))
+    return batches
+
+
 @dataclasses.dataclass
 class WorkflowTrace:
     name: str
@@ -80,6 +141,11 @@ class WorkflowTrace:
 
     def eligible_tasks(self, min_executions: int = 20) -> list[TaskTrace]:
         return [t for t in self.tasks if t.n_executions >= min_executions]
+
+    def to_padded_batch(self, min_executions: int = 20) -> list[PaddedTaskBatch]:
+        """Bucket-padded batches of this workflow's eligible tasks (the batch
+        engine packs whole corpora with ``pack_traces`` directly)."""
+        return pack_traces(self.eligible_tasks(min_executions))
 
 
 # ---------------------------------------------------------------------------

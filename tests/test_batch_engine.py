@@ -1,0 +1,101 @@
+"""The batched multi-method engine matches the sequential Python oracle
+(progressive error mode) for every method, every fraction — including the
+n_train = 0 and n_train = n edge cases — plus packing and k-sweep checks."""
+
+import numpy as np
+import pytest
+
+from repro.core.ksegments import KSegmentsConfig
+from repro.sim import generate_eager
+from repro.sim.batch_engine import GRID_METHODS, simulate_grid, simulate_ksweep
+from repro.sim.jax_sim import ENGINE_METHODS
+from repro.sim.simulator import SimConfig, simulate_suite, simulate_task
+from repro.sim.traces import pack_traces
+
+MIN_EXECS = 10
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    return generate_eager(seed=5, scale=0.12)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SimConfig(min_executions=MIN_EXECS, ksegments=KSegmentsConfig(error_mode="progressive"))
+
+
+@pytest.fixture(scope="module")
+def grid(workflow, cfg):
+    # 0.0 and 1.0 are the fraction-masking edge cases: every execution is
+    # test (the first scored against the default allocation), resp. none is.
+    res = simulate_grid([workflow], ENGINE_METHODS, (0.0, 0.5, 1.0), cfg)
+    return {(r.workflow, r.task, r.method, r.train_frac): r for r in res}
+
+
+def _assert_matches(got, ref):
+    assert got.n_train == ref.n_train and got.n_test == ref.n_test
+    # f32 (engine) vs f64 (oracle) can flip knife-edge failure decisions on
+    # a few executions; totals and retries must agree closely and the bulk
+    # of per-execution outcomes must match.
+    np.testing.assert_allclose(got.wastage_gib_s.sum(), ref.wastage_gib_s.sum(), rtol=0.05, atol=1e-6)
+    assert abs(int(got.retries.sum()) - int(ref.retries.sum())) <= max(2, 0.1 * ref.retries.sum())
+    if ref.n_test:
+        close = np.isclose(got.wastage_gib_s, ref.wastage_gib_s, rtol=0.05, atol=0.5)
+        assert close.mean() > 0.9
+
+
+@pytest.mark.parametrize("method", ENGINE_METHODS)
+@pytest.mark.parametrize("frac", [0.0, 0.5])
+def test_engine_parity_per_method(workflow, cfg, grid, method, frac):
+    for trace in workflow.eligible_tasks(MIN_EXECS)[:2]:
+        ref = simulate_task(trace, method, frac, cfg)
+        _assert_matches(grid[(trace.workflow, trace.name, method, frac)], ref)
+
+
+def test_full_training_fraction_has_no_tests(workflow, grid):
+    for trace in workflow.eligible_tasks(MIN_EXECS):
+        r = grid[(trace.workflow, trace.name, "ksegments-selective", 1.0)]
+        assert r.n_test == 0 and len(r.wastage_gib_s) == 0
+        assert r.mean_wastage == 0.0 and r.mean_retries == 0.0
+
+
+def test_grid_rows_align_with_sequential_suite(workflow, cfg):
+    """Same row ordering and metadata as simulate_suite, cell for cell."""
+    batched = simulate_grid([workflow], GRID_METHODS, (0.5,), cfg)
+    sequential = simulate_suite([workflow], GRID_METHODS, (0.5,), cfg)
+    assert len(batched) == len(sequential)
+    for b, s in zip(batched, sequential):
+        assert (b.workflow, b.task, b.method, b.train_frac) == (s.workflow, s.task, s.method, s.train_frac)
+        assert (b.n_train, b.n_test) == (s.n_train, s.n_test)
+
+
+def test_ksweep_matches_sequential_per_k(workflow, cfg):
+    trace = max(workflow.tasks, key=lambda t: t.n_executions)
+    sweep = simulate_ksweep(trace, (1, 3, 6), 0.5, cfg)
+    for k in (1, 3, 6):
+        ref = simulate_task(trace, "ksegments-selective", 0.5, SimConfig(ksegments=KSegmentsConfig(k=k, error_mode="progressive")))
+        _assert_matches(sweep[k], ref)
+
+
+def test_pack_traces_shapes(workflow):
+    tasks = workflow.eligible_tasks(MIN_EXECS)
+    batches = pack_traces(tasks)
+    assert sum(len(b.tasks) for b in batches) == len(tasks)
+    for b in batches:
+        L, B, T = b.shape
+        assert b.x.shape == (L, B) and b.lengths.shape == (L, B) and len(b.tasks) == L
+        for li, t in enumerate(b.tasks):
+            n = t.n_executions
+            assert b.n_execs[li] == n and n <= B and t.max_samples() <= T
+            assert b.default_mib[li] == t.default_mib
+            # real data in the prefix, inert zeros in the tail
+            assert np.all(b.lengths[li, :n] > 0) and np.all(b.lengths[li, n:] == 0)
+            assert np.all(b.y[li, n:] == 0.0)
+            np.testing.assert_array_equal(b.x[li, :n], [e.input_size for e in t.executions])
+
+
+def test_to_padded_batch_filters_eligibility(workflow):
+    batches = workflow.to_padded_batch(MIN_EXECS)
+    packed = {t.name for b in batches for t in b.tasks}
+    assert packed == {t.name for t in workflow.eligible_tasks(MIN_EXECS)}
