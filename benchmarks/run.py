@@ -9,7 +9,10 @@ figure's headline quantity).
   adaptive_k — per-task online k re-optimization vs fixed k=4 (paper Sec. V)
   kernels — Pallas kernels vs jnp-oracle timing on corpus-scale batches
   admission — serving HBM reservation wastage: segment-wise vs peak
-  cluster — scheduler-level dynamic reservations vs static policies
+  cluster — scheduler-level dynamic reservations vs static policies, on both
+            engines; always writes BENCH_cluster.json (policy, engine,
+            makespan, wastage, retries, cold/warm wall seconds; path override
+            via REPRO_BENCH_CLUSTER_JSON)
   roofline — aggregated dry-run roofline table (reads results/dryrun/)
 
 Run all:    PYTHONPATH=src python -m benchmarks.run
@@ -30,7 +33,9 @@ The fig7 grid and the fig8 k-sweep run on two engines:
 figure rows.  ``fig7a`` always times *both* engines on the identical grid and
 prints ``fig7a/python_engine``, ``fig7a/batch_engine_cold`` (first call,
 includes jit compile) and ``fig7a/batch_engine`` (steady state, with the
-speedup) so the comparison lives in one run.  Both engines use the
+speedup) so the comparison lives in one run.  ``cluster`` does the same for
+the event-driven scheduler: ``run_cluster`` (sequential predictors) vs
+``run_cluster_batched`` (all policies from one shared device-ladder pass).  Both engines use the
 k-Segments "progressive" error mode here so their grids are comparable cell
 by cell (the parity tests in tests/test_batch_engine.py assert per-execution
 agreement); simulation *tests* keep exercising the insample default.
@@ -324,20 +329,95 @@ def bench_admission() -> None:
     _row("admission/reduction", dt * 1e6 / max(len(plans), 1), f"pct={red:.1f}")
 
 
+CLUSTER_JSON = os.environ.get("REPRO_BENCH_CLUSTER_JSON", "BENCH_cluster.json")
+
+
 def bench_cluster() -> None:
     """Beyond-paper: cluster-level scheduling with dynamic reservations
-    (the paper's Sec. IV-E 'resource managers must support adjustments')."""
-    from repro.sim.cluster import run_cluster
+    (the paper's Sec. IV-E 'resource managers must support adjustments').
 
-    wfs = [w for w in _suite()]
+    Times BOTH engines on the identical multi-policy workload — the
+    sequential per-task predictor loop (progressive offsets, so the engines
+    are comparable cell by cell) and the batched device-table scheduler,
+    which computes every policy's retry ladders in one shared pass — and
+    always writes machine-readable rows (policy, engine, makespan, wastage,
+    retries, cold/warm wall seconds) to ``BENCH_cluster.json`` (path override:
+    ``REPRO_BENCH_CLUSTER_JSON``)."""
+    from repro.core.ksegments import KSegmentsConfig
+    from repro.sim.cluster import run_cluster, run_cluster_batched
+
+    wfs = _suite()[:1]
+    policies = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
+    kw = dict(n_nodes=4, max_tasks_per_type=max(int(60 * SCALE), 8), train_frac=0.5)
+    cfg = KSegmentsConfig(error_mode="progressive")
+
     t0 = time.time()
-    for policy in ("default", "ppm-improved", "ksegments-selective"):
-        r = run_cluster(wfs[:1], policy, n_nodes=4, max_tasks_per_type=int(30 * max(SCALE, 0.2)))
+    run_cluster_batched(wfs, policies, **kw)
+    cold = time.time() - t0
+    t0 = time.time()
+    res_b = run_cluster_batched(wfs, policies, **kw)
+    warm = time.time() - t0
+    res_py: dict = {}
+    py_wall: dict = {}
+    t0 = time.time()
+    for p in policies:
+        t1 = time.time()
+        res_py[p] = run_cluster(wfs, p, ksegments_config=cfg, **kw)
+        py_wall[p] = time.time() - t1
+    wall_py = time.time() - t0
+
+    n = sum(r.tasks_run for r in res_b.values())
+    _row("cluster/python_engine", wall_py * 1e6 / max(n, 1), f"wall_s={wall_py:.2f}", engine="python")
+    _row(
+        "cluster/batch_engine_cold",
+        cold * 1e6 / max(n, 1),
+        f"wall_s={cold:.2f} (includes jit compile)",
+        engine="batch",
+    )
+    _row(
+        "cluster/batch_engine",
+        warm * 1e6 / max(n, 1),
+        f"wall_s={warm:.2f} speedup={wall_py / warm:.1f}x",
+        engine="batch",
+    )
+    rows = []
+    for p in policies:
         _row(
-            f"cluster/{policy}",
-            (time.time() - t0) * 1e6 / max(r.tasks_run, 1),
-            f"wastage_gib_s={r.wastage_gib_s:.1f} makespan_s={r.makespan_s:.0f} retries={r.retries}",
+            f"cluster/{p}",
+            py_wall[p] * 1e6 / max(res_py[p].tasks_run, 1),
+            f"wastage_gib_s={res_py[p].wastage_gib_s:.1f} makespan_s={res_py[p].makespan_s:.0f} retries={res_py[p].retries}",
+            engine="python",
         )
+        for engine, r in (("python", res_py[p]), ("batch", res_b[p])):
+            row = {
+                "policy": p,
+                "engine": engine,
+                "makespan_s": round(r.makespan_s, 3),
+                "wastage_gib_s": round(r.wastage_gib_s, 3),
+                "retries": r.retries,
+                "tasks_run": r.tasks_run,
+            }
+            if engine == "python":
+                # per-policy wall exists only for the sequential engine; the
+                # batched engine computes all policies in one shared pass
+                # (see batch_cold_wall_s / batch_warm_wall_s in the header).
+                row["wall_s"] = round(py_wall[p], 4)
+            rows.append(row)
+    payload = {
+        "scale": SCALE,
+        "seed": SEED,
+        "train_frac": kw["train_frac"],
+        "n_nodes": kw["n_nodes"],
+        "max_tasks_per_type": kw["max_tasks_per_type"],
+        "python_wall_s": round(wall_py, 4),
+        "batch_cold_wall_s": round(cold, 4),
+        "batch_warm_wall_s": round(warm, 4),
+        "warm_speedup": round(wall_py / warm, 2),
+        "rows": rows,
+    }
+    with open(CLUSTER_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote cluster rows to {CLUSTER_JSON}", file=sys.stderr)
 
 
 def bench_roofline() -> None:

@@ -102,6 +102,127 @@ def score_attempt_np(series_mib: np.ndarray, interval_s: float, alloc: StepAlloc
     return AttemptOutcome(False, -1, waste / MIB_PER_GIB, alloc_int / MIB_PER_GIB)
 
 
+def pack_step_allocations(allocs: list[StepAllocation]) -> tuple[np.ndarray, np.ndarray]:
+    """Pad R step allocations into the layout ``step_demand_profile``
+    consumes: (R, kmax) inf-padded boundaries and (R, kmax + 1) hold-last
+    values (the extra column is the value held past the final boundary)."""
+    R = len(allocs)
+    kmax = max((a.k for a in allocs), default=1)
+    bnd = np.full((R, kmax), np.inf)
+    val = np.empty((R, kmax + 1))
+    for r, a in enumerate(allocs):
+        kk = a.k
+        bnd[r, :kk] = a.boundaries
+        val[r, :kk] = a.values
+        val[r, kk:] = a.values[-1]
+    return bnd, val
+
+
+def step_demand_profile(
+    bnd: np.ndarray, val: np.ndarray, starts: np.ndarray, releases: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Total demand of R concurrent step reservations as a cumulative profile.
+
+    Args:
+      bnd: (R, kmax) boundaries, inf-padded past each reservation's k.
+      val: (R, kmax + 1) values with hold-last padding (the extra column is
+        the value held past the final boundary).
+      starts: (R,) absolute reservation start times (inclusive).
+      releases: (R,) absolute release times (exclusive: at ``releases[r]`` the
+        reservation no longer counts).
+
+    Returns (event times, cumulative demand): the total at time ``t`` is
+    ``cum[np.searchsorted(times, t, side="right")]``.  Eq. (1) steps are
+    right-open, so each step-up event sits at ``nextafter(switch)`` — the
+    first representable instant the higher value applies (an absolute epsilon
+    would underflow at large timestamps).
+
+    Shared by the cluster scheduler (``sim.cluster.NodeState``) and the
+    serving admission controller (``serve.admission``) so their boundary
+    semantics cannot drift apart.
+    """
+    sw = starts[:, None] + bnd
+    live = np.isfinite(bnd) & (sw < releases[:, None])
+    steps = val[:, 1:] - val[:, :-1]  # (R, kmax), aligned with bnd
+    # The released value must be derived from the same rounded switch times
+    # as ``live`` (counting switches that actually fired), or rounding could
+    # release a step that was never added and unbalance the profile forever.
+    idx_end = np.sum(live, axis=1)
+    v_end = np.take_along_axis(val, idx_end[:, None], axis=1)[:, 0]
+    times = np.concatenate([starts, np.nextafter(sw[live], np.inf), releases])
+    deltas = np.concatenate([val[:, 0], steps[live], -v_end])
+    order = np.argsort(times, kind="stable")
+    return times[order], np.concatenate([[0.0], np.cumsum(deltas[order])])
+
+
+def demand_exceeds(
+    times: np.ndarray,
+    cum: np.ndarray,
+    alloc: StepAllocation,
+    start: float,
+    end: float,
+    budget: float,
+    *,
+    inclusive_end: bool = False,
+) -> bool:
+    """Does profile demand + a candidate step reservation exceed ``budget``
+    anywhere in [start, end) — or [start, end] with ``inclusive_end``?
+
+    ``(times, cum)`` is a ``step_demand_profile``; the candidate holds
+    ``alloc`` from ``start``.  Demand is probed at the candidate's own
+    step-ups (``nextafter`` past each boundary inside the window) and just
+    after every profile event in the window — the only points where the
+    combined step function can rise.  Shared by ``NodeState.fits`` (cluster
+    placement; window right-open at the candidate's departure) and
+    ``AdmissionController.try_admit`` (HBM packing; a plan holds through its
+    final boundary inclusive), so their probe semantics cannot drift apart.
+    """
+    b = np.asarray(alloc.boundaries, dtype=np.float64)
+    probes = np.concatenate([[start], np.nextafter(start + b[b < end - start], np.inf)])
+    probes = probes[probes <= end] if inclusive_end else probes[probes < end]
+    lo = np.searchsorted(times, start, side="right")  # events at start fold into the start probe
+    hi = np.searchsorted(times, end, side="right" if inclusive_end else "left")
+    t_all = np.concatenate([probes, times[lo:hi]])
+    # Every probe — including the profile's own event times — reads the
+    # cumulative sum AFTER all events tied at that instant (searchsorted
+    # side="right"), never a partial mid-tie sum that exists at no real time.
+    prof = cum[np.searchsorted(times, t_all, side="right")]
+    return bool(np.any(prof + alloc.at(t_all - start) > budget))
+
+
+@dataclasses.dataclass
+class AttemptLadder:
+    """The precomputed retry ladder of one execution under one method.
+
+    This is the row format the batched cluster scheduler consumes: the device
+    engine (``repro.sim.jax_sim.simulate_task_ladders``) scores every attempt
+    of every queued execution up front, and the host-side event loop only
+    places these rows against node step profiles.  Attempt ``a``'s allocation
+    shares the prediction's boundaries; ``failure_index[a]`` is its OOM-kill
+    sample (-1 on the final, successful attempt) and ``wastage_gib_s[a]`` its
+    wastage under the same accounting as ``score_attempt_np``.
+    """
+
+    boundaries: np.ndarray  # (k,) seconds
+    values: np.ndarray  # (A, k) MiB, one row per attempt
+    failure_index: np.ndarray  # (A,) int, -1 = success
+    wastage_gib_s: np.ndarray  # (A,)
+    n_attempts: int  # recorded attempts (retries + 1)
+
+    def alloc(self, attempt: int) -> StepAllocation:
+        return StepAllocation(self.boundaries, self.values[attempt])
+
+    def run_time_s(self, attempt: int, duration_s: float, interval_s: float) -> float:
+        """Node occupancy of one attempt: full duration on success, up to and
+        including the kill sample on failure (as the cluster oracle counts)."""
+        fi = int(self.failure_index[attempt])
+        return duration_s if fi < 0 else (fi + 1) * interval_s
+
+    @property
+    def total_wastage_gib_s(self) -> float:
+        return float(self.wastage_gib_s[: self.n_attempts].sum())
+
+
 def run_with_retries_np(
     series_mib: np.ndarray,
     interval_s: float,

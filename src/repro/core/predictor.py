@@ -27,6 +27,24 @@ METHODS = (
     "ksegments-partial",
 )
 
+# Retry policy per method, shared by the sequential adapters below and the
+# batched engines (``repro.sim.jax_sim`` selects them branch-free): a
+# "cap jump" method reassigns the node's full memory on failure (original
+# PPM); every other method multiplies by the retry factor — only the failed
+# segment for selective methods, the failed segment onward for partial.  For
+# the k = 1 baselines the two coincide (the whole allocation doubles), so
+# they ride selective.
+RETRY_SELECTIVE = {m: m != "ksegments-partial" for m in METHODS}
+RETRY_CAP_JUMP = {m: m == "ppm" for m in METHODS}
+
+
+def retry_flags(methods: tuple[str, ...]) -> tuple[tuple[bool, ...], tuple[bool, ...]]:
+    """(selective, cap_jump) flag rows for a method tuple, in row order."""
+    return (
+        tuple(RETRY_SELECTIVE[m] for m in methods),
+        tuple(RETRY_CAP_JUMP[m] for m in methods),
+    )
+
 
 class AllocationMethod(Protocol):
     """What the scheduler needs from any predictor.

@@ -18,7 +18,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.allocation import StepAllocation
+from repro.core.allocation import (
+    StepAllocation,
+    demand_exceeds,
+    pack_step_allocations,
+    step_demand_profile,
+)
 from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
 
 
@@ -44,6 +49,7 @@ class AdmissionController:
         self.model = KSegmentsModel(KSegmentsConfig(k=k, interval_s=interval_s, floor_mib=1.0))
         self.active: dict[str, RequestPlan] = {}
         self._static_reserved = 0.0  # what peak-reservation would hold (baseline)
+        self._prof: tuple | None = None  # cached demand profile; dropped on admit/release
 
     # -- learning ----------------------------------------------------------
 
@@ -53,41 +59,66 @@ class AdmissionController:
 
     # -- admission ----------------------------------------------------------
 
-    def _combined_demand(self, now: float, horizon: tuple[float, ...]) -> np.ndarray:
-        """Total predicted MiB demand of active requests at future times.
+    def _profile(self) -> tuple[np.ndarray, np.ndarray]:
+        """Active plans' total demand as a cumulative step profile (event
+        times, running sum) — ``core.allocation.step_demand_profile``, shared
+        with the cluster simulator's ``NodeState``, so admission stays
+        O(P k log) per request instead of re-summing every plan at every
+        probe.  A plan holds through its final boundary inclusive (the
+        paper's Eq. 1 domain [0, r_e]) and releases just after, hence the
+        ``nextafter`` release times."""
+        if self._prof is None:
+            plans = list(self.active.values())
+            bnd, val = pack_step_allocations([p.alloc for p in plans])
+            starts = np.asarray([p.admitted_at for p in plans])
+            releases = np.asarray(
+                [np.nextafter(p.admitted_at + float(p.alloc.boundaries[-1]), np.inf) for p in plans]
+            )
+            self._prof = step_demand_profile(bnd, val, starts, releases)
+        return self._prof
+
+    def _combined_demand(self, horizon: tuple[float, ...]) -> np.ndarray:
+        """Total predicted MiB demand of active requests at absolute times.
 
         A request's reservation covers its predicted lifetime [0, r_e] (the
         paper's Eq. 1 domain): past its final boundary it is expected to have
         released — that expiry is what lets staggered admissions overlap a
         newcomer's cheap early segments with a leader's remaining window.
         (Requests that outlive r_e are the retry/preemption path.)"""
-        out = np.zeros(len(horizon))
-        for plan in self.active.values():
-            rel = np.asarray(horizon) - plan.admitted_at
-            within = (rel >= 0) & (rel <= plan.alloc.boundaries[-1])
-            out += np.where(within, plan.alloc.at(np.maximum(rel, 0.0)), 0.0)
-        return out
+        times, cum = self._profile()
+        return cum[np.searchsorted(times, np.asarray(horizon), side="right")]
 
     def try_admit(self, request_id: str, prompt_len: int, now: float) -> RequestPlan | None:
-        """Admit if the segment-wise demand fits the budget at every future
-        boundary of the new request's predicted allocation."""
+        """Admit if the segment-wise demand fits the budget at every point
+        where it can rise during the newcomer's reservation window.
+
+        The probe horizon is the union of the newcomer's boundaries and every
+        *active* plan's future switch points (as ``NodeState.fits`` checks in
+        the cluster simulator): an active request stepping up between two of
+        the newcomer's boundaries would otherwise push combined demand over
+        budget undetected.  Steps are right-open (Eq. 1), so switch points are
+        probed just after the boundary, where the higher value applies."""
         if self.model.n_observations == 0:
             alloc = StepAllocation(np.asarray([1.0]), np.asarray([self.budget * 0.05]))
         else:
             alloc = self.model.predict(float(prompt_len))
-        horizon = tuple(now + b for b in alloc.boundaries)
-        demand = self._combined_demand(now, horizon) + alloc.values
-        if np.any(demand > self.budget):
+        times, cum = self._profile()
+        end = now + float(alloc.boundaries[-1])
+        # inclusive end: a plan holds through its final boundary (Eq. 1
+        # domain [0, r_e]), unlike a cluster reservation's right-open window.
+        if demand_exceeds(times, cum, alloc, now, end, self.budget, inclusive_end=True):
             return None
         plan = RequestPlan(request_id, now, alloc)
         self.active[request_id] = plan
         self._static_reserved += float(alloc.values[-1])
+        self._prof = None
         return plan
 
     def release(self, request_id: str) -> None:
         plan = self.active.pop(request_id, None)
         if plan is not None:
             self._static_reserved -= float(plan.alloc.values[-1])
+            self._prof = None
 
     # -- accounting ---------------------------------------------------------
 

@@ -12,9 +12,15 @@ from repro.sim.traces import (
     generate_suite,
     pack_traces,
 )
+from repro.sim.cluster import ClusterResult, NodeState, TaskRecord, run_cluster, run_cluster_batched
 from repro.sim.simulator import SimConfig, TaskResult, run_execution, simulate_suite, simulate_task
 
 __all__ = [
+    "ClusterResult",
+    "NodeState",
+    "TaskRecord",
+    "run_cluster",
+    "run_cluster_batched",
     "Execution",
     "PaddedTaskBatch",
     "TaskTrace",

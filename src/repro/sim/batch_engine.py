@@ -14,6 +14,12 @@ a handful of device dispatches:
    docstring), so each fraction is a host-side slice of the same per-execution
    outcomes — the fraction axis is free.
 
+The same packing serves the cluster scheduler: ``compute_cluster_ladders``
+records every queued execution's full retry ladder (attempt -> allocation,
+failure index, wastage) for all policies in one pass, so
+``repro.sim.cluster.run_cluster_batched``'s host loop only does placement
+(per-task parity with the sequential scheduler in tests/test_cluster_batch.py).
+
 The sequential simulator stays the cross-check oracle: with
 ``error_mode="progressive"`` both engines agree per execution (see
 tests/test_batch_engine.py).  Differences to the oracle elsewhere:
@@ -27,13 +33,16 @@ tests/test_batch_engine.py).  Differences to the oracle elsewhere:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sim.jax_sim import ENGINE_METHODS, simulate_task_methods
+from repro.core.allocation import AttemptLadder
+from repro.core.ksegments import KSegmentsConfig
+from repro.sim.jax_sim import MAX_RETRIES, ENGINE_METHODS, simulate_task_ladders, simulate_task_methods
 from repro.sim.simulator import SimConfig, TaskResult
 from repro.sim.traces import TaskTrace, WorkflowTrace, pack_traces
 
@@ -68,6 +77,22 @@ def _ksweep_batched(method: str, k_max: int, interval_s: float, factor: float, f
         cap_mib=cap_mib,
     )
     return jax.jit(jax.vmap(f, in_axes=(None, None, None, None, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _ladder_batched(methods: tuple[str, ...], k: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float, max_attempts: int):
+    """Compiled (lanes-vmapped) retry-ladder recorder for one static config."""
+    f = functools.partial(
+        simulate_task_ladders,
+        methods=methods,
+        k=k,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
+        max_attempts=max_attempts,
+    )
+    return jax.jit(jax.vmap(f, in_axes=(0, 0, 0, 0, None)))
 
 
 def _check_methods(methods) -> tuple[str, ...]:
@@ -128,6 +153,98 @@ def simulate_grid(
                         )
                     )
     return results
+
+
+@dataclasses.dataclass
+class TaskLadders:
+    """All methods' retry ladders for one task type, host-side (float64).
+
+    Arrays are indexed [method, execution, attempt(, segment)]; see
+    ``jax_sim.simulate_task_ladders`` for semantics.  ``row`` materializes one
+    (method, execution) cell as the ``AttemptLadder`` the cluster scheduler
+    consumes.
+    """
+
+    methods: tuple[str, ...]
+    boundaries: np.ndarray  # (M, B, k)
+    values: np.ndarray  # (M, B, A, k)
+    failure_index: np.ndarray  # (M, B, A)
+    wastage_gib_s: np.ndarray  # (M, B, A)
+    n_attempts: np.ndarray  # (M, B)
+
+    def row(self, method: str, execution: int) -> AttemptLadder:
+        mi = self.methods.index(method)
+        n = int(self.n_attempts[mi, execution])
+        if int(self.failure_index[mi, execution, n - 1]) >= 0:
+            hint = (
+                "raise max_attempts"
+                if self.values.shape[2] <= MAX_RETRIES
+                else f"the engine caps retries at {MAX_RETRIES}; the task cannot be scheduled"
+            )
+            raise RuntimeError(
+                f"retry ladder of execution {execution} under {method!r} did not "
+                f"converge within the recorded {self.values.shape[2]} attempts; {hint}"
+            )
+        return AttemptLadder(
+            boundaries=self.boundaries[mi, execution],
+            values=self.values[mi, execution],
+            failure_index=self.failure_index[mi, execution],
+            wastage_gib_s=self.wastage_gib_s[mi, execution],
+            n_attempts=n,
+        )
+
+
+def compute_cluster_ladders(
+    tasks: list[TaskTrace],
+    methods: tuple[str, ...],
+    node_cap_mib: float,
+    kcfg: KSegmentsConfig | None = None,
+    max_attempts: int = 32,
+) -> dict[tuple[str, str], TaskLadders]:
+    """Precompute every execution's retry ladder for every method, batched.
+
+    The cluster scheduler's per-task work — predict, score attempts, observe —
+    is exactly the online recurrence ``simulate_task_ladders`` expresses, so
+    the whole corpus runs as one bucket-padded vmapped program per shape
+    (``pack_traces``).  Returns ``{(workflow, task name): TaskLadders}``; any
+    training fraction is a post-hoc row slice, as in ``simulate_grid``.
+
+    k-Segments offsets are progressive (the engine's bounded-carry mode);
+    cross-checks must run the sequential oracle with
+    ``KSegmentsConfig(error_mode="progressive")``.
+    """
+    kcfg = kcfg or KSegmentsConfig()
+    methods = _check_methods(methods)
+    for t in tasks:
+        if t.interval_s != kcfg.interval_s:
+            raise ValueError(
+                f"trace {t.name!r} interval {t.interval_s} != config interval {kcfg.interval_s}; "
+                "the ladder program bakes one static monitoring interval"
+            )
+    fn = _ladder_batched(
+        methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, node_cap_mib, max_attempts
+    )
+    out: dict[tuple[str, str], TaskLadders] = {}
+    for batch in pack_traces(tasks):
+        tbl = fn(
+            jnp.asarray(batch.x),
+            jnp.asarray(batch.y),
+            jnp.asarray(batch.lengths),
+            jnp.asarray(batch.default_mib, jnp.float32),
+            jnp.asarray(kcfg.k, jnp.int32),
+        )
+        tbl = {name: np.asarray(v) for name, v in tbl.items()}
+        for li, trace in enumerate(batch.tasks):
+            n = int(batch.n_execs[li])
+            out[(trace.workflow, trace.name)] = TaskLadders(
+                methods=methods,
+                boundaries=tbl["boundaries"][li, :, :n].astype(np.float64),
+                values=tbl["values"][li, :, :n].astype(np.float64),
+                failure_index=tbl["failure_index"][li, :, :n],
+                wastage_gib_s=tbl["wastage_gib_s"][li, :, :n].astype(np.float64),
+                n_attempts=tbl["n_attempts"][li, :, :n],
+            )
+    return out
 
 
 def simulate_ksweep(

@@ -10,6 +10,19 @@ and OOM kills trigger the predictor's retry strategy.
 Outputs per policy: makespan, wastage (reserved-minus-used GiB*s), retries —
 so the scheduler-level benefit of segment-wise reservations (vs static peak
 reservations) is measurable end to end, not just per task.
+
+Two engines share the placement logic (``_find_slot`` / ``NodeState``):
+
+* ``run_cluster`` — the sequential oracle: one ``predict``/score/``observe``
+  chain per task through the numpy predictors.
+* ``run_cluster_batched`` — every queued execution's predictions and full
+  retry ladder (attempt -> allocation, failure index, wastage) precomputed
+  for **all** policies in one pass of bucket-padded vmapped device programs
+  (``repro.sim.batch_engine.compute_cluster_ladders``); the host event loop
+  only does placement.  Predictions see exactly the executions the sequential
+  protocol would have observed (completed earlier executions of the same task
+  type), so per-task outcomes match the oracle run with
+  ``KSegmentsConfig(error_mode="progressive")`` — see tests/test_cluster_batch.py.
 """
 
 from __future__ import annotations
@@ -19,7 +32,14 @@ import heapq
 
 import numpy as np
 
-from repro.core.allocation import StepAllocation, score_attempt_np
+from repro.core.allocation import (
+    StepAllocation,
+    demand_exceeds,
+    pack_step_allocations,
+    score_attempt_np,
+    step_demand_profile,
+)
+from repro.core.ksegments import KSegmentsConfig
 from repro.core.predictor import AllocationMethod, make_method
 from repro.sim.traces import TaskTrace, WorkflowTrace
 
@@ -29,29 +49,117 @@ class NodeState:
     capacity_mib: float
     # active reservations: (end_time, alloc, start_time)
     active: list[tuple[float, StepAllocation, float]] = dataclasses.field(default_factory=list)
+    # Packed array view of ``active`` maintained incrementally by add()/
+    # expire().  Mutate through those methods; direct external mutation
+    # (append, rebind, in-place element replacement) is detected via the
+    # row-identity key — a mutating row must coexist with the row it
+    # replaces, so the key change is deterministic — and triggers a full
+    # rebuild on the next fits().  The node's combined demand profile
+    # (_profile) derives from the packed view lazily.
+    _packed: tuple | None = dataclasses.field(default=None, repr=False, compare=False)
+    _prof: tuple | None = dataclasses.field(default=None, repr=False, compare=False)
 
     def reserved_at(self, t: float) -> float:
-        return sum(a.at(np.asarray([t - s]))[0] for e, a, s in self.active if s <= t < e)
+        """Total reserved MiB at time ``t`` (one profile probe — same source
+        of truth as fits())."""
+        times, cum = self._profile()
+        return float(cum[np.searchsorted(times, t, side="right")])
+
+    def _key(self) -> tuple[int, ...]:
+        return tuple(map(id, self.active))
+
+    def _pack(self):
+        """(boundaries (R, kmax) inf-padded, values (R, kmax+1) hold-last,
+        starts (R,), ends (R,)) of the active reservations."""
+        if self._packed is None or self._packed[0] != self._key():
+            bnd, val = pack_step_allocations([a for _, a, _ in self.active])
+            starts = np.asarray([s for _, _, s in self.active])
+            ends = np.asarray([e for e, _, _ in self.active])
+            self._packed = (self._key(), bnd, val, starts, ends)
+        return self._packed[1:]
+
+    def _profile(self):
+        """The node's total reserved-demand step profile as (event times,
+        cumulative demand): ``cum[searchsorted(times, t, "right")]`` is the
+        reservation sum at ``t`` (see ``core.allocation.step_demand_profile``;
+        a reservation end is its release time — exclusive)."""
+        key = self._key()
+        if self._prof is None or self._prof[0] != key:
+            bnd, val, starts, ends = self._pack()
+            self._prof = (key, *step_demand_profile(bnd, val, starts, ends))
+        return self._prof[1], self._prof[2]
+
+    def add(self, end: float, alloc: StepAllocation, start: float) -> None:
+        """Reserve ``alloc`` over [start, end); keeps the packed view current
+        (one appended row instead of an O(R k) rebuild per placement)."""
+        bnd, val, starts, ends = self._pack()
+        self.active.append((end, alloc, start))
+        kk, kmax = alloc.k, bnd.shape[1]
+        if kk > kmax:
+            grow = kk - kmax
+            bnd = np.concatenate([bnd, np.full((len(starts), grow), np.inf)], axis=1)
+            val = np.concatenate([val, np.repeat(val[:, -1:], grow, axis=1)], axis=1)
+            kmax = kk
+        row_b = np.full(kmax, np.inf)
+        row_b[:kk] = alloc.boundaries
+        row_v = np.empty(kmax + 1)
+        row_v[:kk] = alloc.values
+        row_v[kk:] = alloc.values[-1]
+        self._packed = (
+            self._key(),
+            np.vstack([bnd, row_b]),
+            np.vstack([val, row_v]),
+            np.append(starts, start),
+            np.append(ends, end),
+        )
+        # The (id, len) key alone cannot be trusted across internal mutations:
+        # CPython reuses list ids, so a later list at a recycled address could
+        # resurrect a stale profile.  Drop it explicitly.
+        self._prof = None
+
+    def expire(self, t: float) -> None:
+        """Drop reservations that ended at or before ``t`` (mask filter on the
+        packed view; no-op — and no cache invalidation — when none expired)."""
+        if not self.active:
+            return
+        bnd, val, starts, ends = self._pack()
+        keep = ends > t
+        if keep.all():
+            return
+        self.active = [row for row, k_ in zip(self.active, keep) if k_]
+        self._packed = (self._key(), bnd[keep], val[keep], starts[keep], ends[keep])
+        self._prof = None  # see add(): ids recycle, never trust the stale key
 
     def fits(self, alloc: StepAllocation, start: float, duration: float) -> bool:
-        """Check the combined step profile at every switch point of every
-        active reservation plus the candidate's own.  Eq. (1) steps are
-        right-open, so demand is probed just AFTER each boundary (t+eps) —
-        that is where the new, higher value applies."""
-        eps = 1e-6
-        checkpoints = {start}
-        checkpoints.update(start + float(b) + eps for b in alloc.boundaries if b < duration)
-        for e, a, s in self.active:
-            checkpoints.update(s + float(b) + eps for b in a.boundaries)
-            checkpoints.add(s)
-        cand_end = start + duration
-        for t in sorted(checkpoints):
-            if t < start or t >= cand_end:
-                continue
-            demand = self.reserved_at(t) + alloc.at(np.asarray([t - start]))[0]
-            if demand > self.capacity_mib + 1e-6:
-                return False
-        return True
+        """Can the candidate's reservation be placed over [start,
+        start + duration) without the combined step profile exceeding
+        capacity?  One ``demand_exceeds`` probe pass against the node's
+        cached cumulative profile — this is the scheduler's placement inner
+        loop, and per-checkpoint scalar probes dominated whole cluster runs."""
+        times, cum = self._profile()
+        return not demand_exceeds(
+            times, cum, alloc, start, start + duration, self.capacity_mib + 1e-6
+        )
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """One queued execution's fate: every attempt's placement plus totals.
+
+    Tasks are identified by (workflow, task) — task names can collide across
+    workflows (same convention as ``simulator.fig7b_lowest_counts``)."""
+
+    workflow: str
+    task: str
+    exec_index: int
+    attempts: int  # retries + 1
+    placements: list[tuple[int, float, float]]  # (node, start, end) per attempt
+    wastage_gib_s: float
+
+    @property
+    def finish_s(self) -> float:
+        """Completion time of the successful (final) attempt."""
+        return self.placements[-1][2]
 
 
 @dataclasses.dataclass
@@ -61,6 +169,50 @@ class ClusterResult:
     wastage_gib_s: float
     retries: int
     tasks_run: int
+    records: list[TaskRecord] = dataclasses.field(default_factory=list)
+
+
+def _eligible_queue(
+    workflows: list[WorkflowTrace],
+    train_frac: float,
+    max_tasks_per_type: int,
+    min_executions: int,
+) -> tuple[list[tuple[TaskTrace, int]], list[tuple[TaskTrace, int]]]:
+    """Arrival-ordered (trace, execution index) rows + per-trace train split."""
+    queue: list[tuple[TaskTrace, int]] = []
+    traces: list[tuple[TaskTrace, int]] = []
+    for wf in workflows:
+        for trace in wf.eligible_tasks(min_executions):
+            n_train = int(trace.n_executions * train_frac)
+            traces.append((trace, n_train))
+            for i in range(n_train, min(trace.n_executions, n_train + max_tasks_per_type)):
+                queue.append((trace, i))
+    return queue, traces
+
+
+def _gc(nodes: list[NodeState], t: float) -> None:
+    for nd in nodes:
+        nd.expire(t)
+
+
+def _find_slot(
+    nodes: list[NodeState],
+    events: list[tuple[float, int]],
+    now: float,
+    alloc: StepAllocation,
+    duration: float,
+) -> tuple[int, float]:
+    """First-fit placement against the future reservation profiles; waits on
+    the completion heap when no node fits.  Returns (node index, time)."""
+    while True:
+        _gc(nodes, now)
+        for ni, nd in enumerate(nodes):
+            if nd.fits(alloc, now, duration):
+                return ni, now
+        if events:
+            now = max(now, heapq.heappop(events)[0])  # wait for a slot
+        else:
+            now += 1.0
 
 
 def run_cluster(
@@ -70,24 +222,26 @@ def run_cluster(
     node_mib: float = 128 * 1024.0,
     train_frac: float = 0.5,
     max_tasks_per_type: int = 40,
+    min_executions: int = 10,
+    ksegments_config: KSegmentsConfig | None = None,
 ) -> ClusterResult:
     """Replay workflow executions through an n-node cluster under a policy
     ("ksegments-selective", "ppm-improved", "default", ...).
 
     Tasks arrive in trace order; each waits until some node fits its
-    reservation.  Per-method online learning happens as tasks finish.
+    reservation.  Per-method online learning happens as tasks finish.  This
+    is the sequential oracle; ``run_cluster_batched`` is the device-backed
+    twin (pass ``ksegments_config=KSegmentsConfig(error_mode="progressive")``
+    here to compare them cell by cell).
     """
-    methods: dict[str, AllocationMethod] = {}
-    queue: list[tuple[TaskTrace, int]] = []
-    for wf in workflows:
-        for trace in wf.eligible_tasks(10):
-            n_train = int(trace.n_executions * train_frac)
-            m = make_method(policy, trace.default_mib, node_mib)
-            for e in trace.executions[:n_train]:
-                m.observe(e.input_size, e.series)
-            methods[trace.name] = m
-            for i in range(n_train, min(trace.n_executions, n_train + max_tasks_per_type)):
-                queue.append((trace, i))
+    queue, traces = _eligible_queue(workflows, train_frac, max_tasks_per_type, min_executions)
+    # keyed by (workflow, task name): task names can collide across workflows
+    methods: dict[tuple[str, str], AllocationMethod] = {}
+    for trace, n_train in traces:
+        m = make_method(policy, trace.default_mib, node_mib, ksegments_config)
+        for e in trace.executions[:n_train]:
+            m.observe(e.input_size, e.series)
+        methods[(trace.workflow, trace.name)] = m
 
     nodes = [NodeState(node_mib) for _ in range(n_nodes)]
     # event heap of (time, node_idx) completions to garbage-collect reservations
@@ -95,39 +249,36 @@ def run_cluster(
     now = 0.0
     total_waste = 0.0
     total_retries = 0
-
-    def gc(t: float) -> None:
-        for nd in nodes:
-            nd.active = [(e, a, s) for (e, a, s) in nd.active if e > t]
+    # The completion heap is consumed while waiting for slots and _gc() drops
+    # expired reservations, so the makespan is tracked explicitly as the max
+    # over every placed attempt's end instead of being reconstructed from
+    # whatever survives both (which undercounts).
+    makespan = 0.0
+    records: list[TaskRecord] = []
 
     for trace, i in queue:
         e = trace.executions[i]
-        method = methods[trace.name]
+        method = methods[(trace.workflow, trace.name)]
         series = e.series
         duration = len(series) * trace.interval_s
         # retry loop: each attempt is a fresh placement
         alloc = method.predict(e.input_size)
         attempts = 0
+        task_waste = 0.0
+        placements: list[tuple[int, float, float]] = []
         while True:
             attempts += 1
             alloc = StepAllocation(alloc.boundaries, np.minimum(alloc.values, node_mib))
-            placed = None
-            while placed is None:
-                gc(now)
-                for ni, nd in enumerate(nodes):
-                    if nd.fits(alloc, now, duration):
-                        placed = ni
-                        break
-                if placed is None:
-                    if events:
-                        now = max(now, heapq.heappop(events)[0])  # wait for a slot
-                    else:
-                        now += 1.0
+            placed, now = _find_slot(nodes, events, now, alloc, duration)
             out = score_attempt_np(series, trace.interval_s, alloc)
             run_time = (out.failure_index + 1) * trace.interval_s if out.failed else duration
-            nodes[placed].active.append((now + run_time, alloc, now))
-            heapq.heappush(events, (now + run_time, placed))
+            end = now + run_time
+            nodes[placed].add(end, alloc, now)
+            heapq.heappush(events, (end, placed))
+            placements.append((placed, now, end))
+            makespan = max(makespan, end)
             total_waste += out.wastage_gib_s
+            task_waste += out.wastage_gib_s
             if not out.failed:
                 break
             total_retries += 1
@@ -136,14 +287,83 @@ def run_cluster(
             seg = alloc.segment_of((out.failure_index + 0.5) * trace.interval_s)
             alloc = method.on_failure(alloc, seg, node_mib)
         method.observe(e.input_size, e.series)
+        records.append(TaskRecord(trace.workflow, trace.name, i, attempts, placements, task_waste))
         # arrival pacing: next task arrives as soon as submitted (batch queue)
 
-    makespan = max((e for e, _, _ in (r for nd in nodes for r in nd.active)), default=now)
-    makespan = max(makespan, max((t for t, _ in events), default=now))
     return ClusterResult(
         policy=policy,
         makespan_s=float(makespan),
         wastage_gib_s=float(total_waste),
         retries=int(total_retries),
         tasks_run=len(queue),
+        records=records,
     )
+
+
+def run_cluster_batched(
+    workflows: list[WorkflowTrace],
+    policies: tuple[str, ...],
+    n_nodes: int = 4,
+    node_mib: float = 128 * 1024.0,
+    train_frac: float = 0.5,
+    max_tasks_per_type: int = 40,
+    min_executions: int = 10,
+    ksegments_config: KSegmentsConfig | None = None,
+    max_attempts: int = 32,
+) -> dict[str, ClusterResult]:
+    """Evaluate every policy through the cluster in one device pass.
+
+    All queued executions' predictions and retry ladders — for **all**
+    policies at once — come from one shared tensor of (attempt -> allocation,
+    failure index, wastage) rows computed by bucket-padded vmapped scans
+    (``compute_cluster_ladders``); the remaining host loop only places those
+    rows against ``NodeState`` step profiles.  Returns {policy: ClusterResult}
+    with the same per-task records as the sequential oracle.
+
+    k-Segments policies run with progressive error offsets (the device
+    engine's bounded-carry mode); ``ksegments_config.error_mode`` other than
+    "progressive" is rejected to keep results honest.
+    """
+    from repro.sim.batch_engine import compute_cluster_ladders  # deferred: keeps the oracle jax-free
+
+    kcfg = ksegments_config or KSegmentsConfig(error_mode="progressive")
+    if kcfg.error_mode != "progressive":
+        raise ValueError("run_cluster_batched supports only progressive error offsets")
+    policies = tuple(policies)
+    queue, traces = _eligible_queue(workflows, train_frac, max_tasks_per_type, min_executions)
+    ladders = compute_cluster_ladders([t for t, _ in traces], policies, node_mib, kcfg, max_attempts)
+
+    results: dict[str, ClusterResult] = {}
+    for policy in policies:
+        nodes = [NodeState(node_mib) for _ in range(n_nodes)]
+        events: list[tuple[float, int]] = []
+        now = 0.0
+        total_waste = 0.0
+        total_retries = 0
+        makespan = 0.0
+        records: list[TaskRecord] = []
+        for trace, i in queue:
+            lad = ladders[(trace.workflow, trace.name)].row(policy, i)
+            duration = len(trace.executions[i].series) * trace.interval_s
+            placements: list[tuple[int, float, float]] = []
+            for a in range(lad.n_attempts):
+                alloc = lad.alloc(a)
+                placed, now = _find_slot(nodes, events, now, alloc, duration)
+                end = now + lad.run_time_s(a, duration, trace.interval_s)
+                nodes[placed].add(end, alloc, now)
+                heapq.heappush(events, (end, placed))
+                placements.append((placed, now, end))
+                makespan = max(makespan, end)
+            task_waste = lad.total_wastage_gib_s
+            total_waste += task_waste
+            total_retries += lad.n_attempts - 1
+            records.append(TaskRecord(trace.workflow, trace.name, i, lad.n_attempts, placements, task_waste))
+        results[policy] = ClusterResult(
+            policy=policy,
+            makespan_s=float(makespan),
+            wastage_gib_s=float(total_waste),
+            retries=int(total_retries),
+            tasks_run=len(queue),
+            records=records,
+        )
+    return results

@@ -44,27 +44,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import regression
+from repro.core.predictor import METHODS, retry_flags
 from repro.core.segmentation import segment_peaks_dynamic
 
 MIB_PER_GIB = 1024.0
 MAX_RETRIES = 64
 
-# Method rows the multi-method scan can score, in output-row order.
-ENGINE_METHODS = (
-    "default",
-    "witt-lr",
-    "witt-lr-max",
-    "ppm",
-    "ppm-improved",
-    "ksegments-selective",
-    "ksegments-partial",
-)
-# Retry policy per row: "cap" jumps to the node maximum (original PPM); every
-# other method multiplies by the retry factor — only the failed segment for
-# selective, the failed segment onward for partial.  For the k = 1 baselines
-# the two coincide (the whole allocation doubles), so they ride "selective".
-_SELECTIVE = {m: m != "ksegments-partial" for m in ENGINE_METHODS}
-_CAP_JUMP = {m: m == "ppm" for m in ENGINE_METHODS}
+# Method rows the multi-method scan can score, in output-row order.  The
+# per-row retry policy (selective / partial bump, node-cap jump) is the
+# shared table in repro.core.predictor (see retry_flags).
+ENGINE_METHODS = METHODS
 
 
 def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval_s: float, floor_mib: float):
@@ -104,15 +93,23 @@ def _attempt(y, length, interval_s, bounds, values):
     return failed, fail_idx, waste
 
 
-def _replay_multi(y, length, bounds, values, selective, capjump, k_eff, *, interval_s, factor, cap_mib):
+def _replay_multi(
+    y, length, bounds, values, selective, capjump, k_eff, *, interval_s, factor, cap_mib, max_attempts=None
+):
     """Shared retry loop for all methods: one bounded while_loop advances every
     method's retry ladder together (finished rows hold their state).
 
     Args: y (T,), length scalar, bounds/values (M, k), selective/capjump (M,)
-    per-method retry-mode flags.  Returns (waste (M,), retries (M,)).
+    per-method retry-mode flags.  Returns (waste (M,), retries (M,)), plus —
+    when ``max_attempts`` is set — the recorded per-attempt ladder
+    (values (M, A, k), failure index (M, A) with -1 = success,
+    wastage (M, A), n_attempts (M,)): the rows the cluster scheduler replays
+    placement against.  A row that would exceed A attempts stops with its
+    last recorded failure index >= 0; the host consumer detects and raises.
     """
     M, k = values.shape
     seg_pos = jnp.arange(k)[None, :]
+    record = max_attempts is not None
 
     def attempt_all(vals):
         return jax.vmap(lambda b, v: _attempt(y, length, interval_s, b, v))(bounds, vals)
@@ -122,10 +119,20 @@ def _replay_multi(y, length, bounds, values, selective, capjump, k_eff, *, inter
         return jnp.any(~done)
 
     def body(c):
-        done, retries, waste, vals = c
+        done, retries, waste, vals, rec = c
         failed, fail_idx, w = attempt_all(vals)
         active = ~done
         waste = waste + jnp.where(active, w, 0.0)
+        if record:
+            vbuf, fbuf, wbuf, natt = rec
+            rows = jnp.arange(M)
+            att = jnp.minimum(natt, max_attempts - 1)
+            fi = jnp.where(failed, fail_idx, -1).astype(jnp.int32)
+            vbuf = vbuf.at[rows, att].set(jnp.where(active[:, None], vals, vbuf[rows, att]))
+            fbuf = fbuf.at[rows, att].set(jnp.where(active, fi, fbuf[rows, att]))
+            wbuf = wbuf.at[rows, att].set(jnp.where(active, w, wbuf[rows, att]))
+            natt = natt + active.astype(jnp.int32)
+            rec = (vbuf, fbuf, wbuf, natt)
         t_fail = (fail_idx.astype(jnp.float32) + 0.5) * interval_s
         seg = jnp.minimum(jnp.sum(t_fail[:, None] > bounds, axis=1), k_eff - 1)  # (M,)
         bump_sel = vals * jnp.where(seg_pos == seg[:, None], factor, 1.0)
@@ -136,9 +143,19 @@ def _replay_multi(y, length, bounds, values, selective, capjump, k_eff, *, inter
         retries = retries + step_fail.astype(jnp.int32)
         vals = jnp.where(step_fail[:, None], bumped, vals)
         done = done | (active & ~failed) | (retries > MAX_RETRIES)
-        return done, retries, waste, vals
+        if record:
+            done = done | (rec[3] >= max_attempts)  # ladder buffer full
+        return done, retries, waste, vals, rec
 
-    _, retries, waste, _ = jax.lax.while_loop(
+    rec0 = ()
+    if record:
+        rec0 = (
+            jnp.zeros((M, max_attempts, k), jnp.float32),
+            jnp.full((M, max_attempts), -1, jnp.int32),
+            jnp.zeros((M, max_attempts), jnp.float32),
+            jnp.zeros((M,), jnp.int32),
+        )
+    _, retries, waste, _, rec = jax.lax.while_loop(
         cond,
         body,
         (
@@ -146,8 +163,11 @@ def _replay_multi(y, length, bounds, values, selective, capjump, k_eff, *, inter
             jnp.zeros((M,), jnp.int32),
             jnp.zeros((M,), jnp.float32),
             jnp.minimum(values, cap_mib),
+            rec0,
         ),
     )
+    if record:
+        return waste, retries, rec
     return waste, retries
 
 
@@ -233,6 +253,116 @@ def _ppm_prefix_values(gpeak, rt_samples, cap_mib, floor_mib):
 # ---------------------------------------------------------------------------
 
 
+def _simulate_methods(
+    x,
+    y,
+    lengths,
+    default_mib,
+    k_eff=None,
+    *,
+    methods: tuple[str, ...] = ENGINE_METHODS,
+    k: int = 4,
+    interval_s: float = 2.0,
+    factor: float = 2.0,
+    floor_mib: float = 100.0,
+    cap_mib: float = 128 * 1024.0,
+    max_attempts: int | None = None,
+):
+    """Shared body of the multi-method engines (see the jitted entry points
+    ``simulate_task_methods`` and ``simulate_task_ladders``)."""
+    B, T = y.shape
+    y = y.astype(jnp.float32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    u = (x - x[0]).astype(jnp.float32)  # conditioning shift (see regression.py)
+    default_mib = jnp.asarray(default_mib, jnp.float32)
+    k_eff = jnp.asarray(k if k_eff is None else k_eff, jnp.int32)
+
+    peaks_all = segment_peaks_dynamic(y, lengths, k_eff, k)  # (B, k) — the segmax kernel's job
+    gpeak = jnp.max(jnp.where(jnp.arange(T)[None, :] < lengths[:, None], y, 0.0), axis=1)
+
+    need = set(methods)
+    zeros = jnp.zeros((B,), jnp.float32)
+    witt_std, witt_max = (
+        _witt_prefix_values(u, gpeak, floor_mib) if need & {"witt-lr", "witt-lr-max"} else (zeros, zeros)
+    )
+    ppm_orig, ppm_imp = (
+        _ppm_prefix_values(gpeak, lengths.astype(jnp.float32), cap_mib, floor_mib)
+        if need & {"ppm", "ppm-improved"}
+        else (zeros, zeros)
+    )
+
+    selective, cap_jump = retry_flags(methods)
+    sel_flags = jnp.asarray(selective)
+    cap_flags = jnp.asarray(cap_jump)
+    inf_bounds = jnp.full((k,), jnp.inf, jnp.float32)
+    ones_k = jnp.ones((k,), jnp.float32)
+    need_ks = bool(need & {"ksegments-selective", "ksegments-partial"})
+
+    def step(carry, inp):
+        rt_stats, rt_over, seg_stats, seg_under, i = carry
+        ui, yi, li, peaks_i, vals_i = inp
+        has_obs = i >= 1
+
+        if need_ks:
+            ks_bounds, ks_values = _predict(
+                rt_stats, rt_over, seg_stats, seg_under, ui, k, k_eff, interval_s, floor_mib
+            )
+        rows_b, rows_v = [], []
+        for m in methods:
+            if m.startswith("ksegments"):
+                rows_b.append(jnp.where(has_obs, ks_bounds, inf_bounds))
+                rows_v.append(jnp.where(has_obs, ks_values, default_mib * ones_k))
+            elif m == "default":
+                rows_b.append(inf_bounds)
+                rows_v.append(default_mib * ones_k)
+            else:
+                rows_b.append(inf_bounds)
+                rows_v.append(jnp.where(has_obs, vals_i[m], default_mib) * ones_k)
+        bounds_m = jnp.stack(rows_b)
+        replayed = _replay_multi(
+            yi,
+            li,
+            bounds_m,
+            jnp.stack(rows_v),
+            sel_flags,
+            cap_flags,
+            k_eff,
+            interval_s=interval_s,
+            factor=factor,
+            cap_mib=cap_mib,
+            max_attempts=max_attempts,
+        )
+        if max_attempts is None:
+            waste, retries = replayed
+            out = (waste, retries)
+        else:
+            waste, retries, (vbuf, fbuf, wbuf, natt) = replayed
+            out = (waste, retries, bounds_m, vbuf, fbuf, wbuf, natt)
+
+        # observe (progressive offsets: score-then-update)
+        runtime = li.astype(jnp.float32) * interval_s
+        has_data = rt_stats[regression.N] > 0
+        rt_pred = regression.predict(rt_stats, ui)
+        rt_over = jnp.where(has_data, jnp.maximum(rt_over, rt_pred - runtime), rt_over)
+        seg_pred = regression.predict(seg_stats, ui)
+        seg_under = jnp.where(has_data, jnp.maximum(seg_under, peaks_i - seg_pred), seg_under)
+        rt_stats = regression.update_stats(rt_stats, ui, runtime)
+        seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
+        return (rt_stats, rt_over, seg_stats, seg_under, i + 1), out
+
+    init = (
+        regression.empty_stats(),
+        jnp.asarray(0.0, jnp.float32),
+        regression.empty_stats(k),
+        jnp.zeros((k,), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    per_step_vals = {"witt-lr": witt_std, "witt-lr-max": witt_max, "ppm": ppm_orig, "ppm-improved": ppm_imp}
+    xs = (u, y, lengths, peaks_all, per_step_vals)
+    _, outs = jax.lax.scan(step, init, xs)
+    return outs
+
+
 @functools.partial(
     jax.jit, static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib")
 )
@@ -263,88 +393,81 @@ def simulate_task_methods(
     Executions past a caller's valid count must sit at the tail; their
     updates only ever feed later (also-invalid) rows.
     """
-    B, T = y.shape
-    y = y.astype(jnp.float32)
-    lengths = jnp.asarray(lengths, jnp.int32)
-    u = (x - x[0]).astype(jnp.float32)  # conditioning shift (see regression.py)
-    default_mib = jnp.asarray(default_mib, jnp.float32)
-    k_eff = jnp.asarray(k if k_eff is None else k_eff, jnp.int32)
-
-    peaks_all = segment_peaks_dynamic(y, lengths, k_eff, k)  # (B, k) — the segmax kernel's job
-    gpeak = jnp.max(jnp.where(jnp.arange(T)[None, :] < lengths[:, None], y, 0.0), axis=1)
-
-    need = set(methods)
-    zeros = jnp.zeros((B,), jnp.float32)
-    witt_std, witt_max = (
-        _witt_prefix_values(u, gpeak, floor_mib) if need & {"witt-lr", "witt-lr-max"} else (zeros, zeros)
+    waste, retries = _simulate_methods(
+        x,
+        y,
+        lengths,
+        default_mib,
+        k_eff,
+        methods=methods,
+        k=k,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
     )
-    ppm_orig, ppm_imp = (
-        _ppm_prefix_values(gpeak, lengths.astype(jnp.float32), cap_mib, floor_mib)
-        if need & {"ppm", "ppm-improved"}
-        else (zeros, zeros)
-    )
-
-    sel_flags = jnp.asarray([_SELECTIVE[m] for m in methods])
-    cap_flags = jnp.asarray([_CAP_JUMP[m] for m in methods])
-    inf_bounds = jnp.full((k,), jnp.inf, jnp.float32)
-    ones_k = jnp.ones((k,), jnp.float32)
-    need_ks = bool(need & {"ksegments-selective", "ksegments-partial"})
-
-    def step(carry, inp):
-        rt_stats, rt_over, seg_stats, seg_under, i = carry
-        ui, yi, li, peaks_i, vals_i = inp
-        has_obs = i >= 1
-
-        if need_ks:
-            ks_bounds, ks_values = _predict(
-                rt_stats, rt_over, seg_stats, seg_under, ui, k, k_eff, interval_s, floor_mib
-            )
-        rows_b, rows_v = [], []
-        for m in methods:
-            if m.startswith("ksegments"):
-                rows_b.append(jnp.where(has_obs, ks_bounds, inf_bounds))
-                rows_v.append(jnp.where(has_obs, ks_values, default_mib * ones_k))
-            elif m == "default":
-                rows_b.append(inf_bounds)
-                rows_v.append(default_mib * ones_k)
-            else:
-                rows_b.append(inf_bounds)
-                rows_v.append(jnp.where(has_obs, vals_i[m], default_mib) * ones_k)
-        waste, retries = _replay_multi(
-            yi,
-            li,
-            jnp.stack(rows_b),
-            jnp.stack(rows_v),
-            sel_flags,
-            cap_flags,
-            k_eff,
-            interval_s=interval_s,
-            factor=factor,
-            cap_mib=cap_mib,
-        )
-
-        # observe (progressive offsets: score-then-update)
-        runtime = li.astype(jnp.float32) * interval_s
-        has_data = rt_stats[regression.N] > 0
-        rt_pred = regression.predict(rt_stats, ui)
-        rt_over = jnp.where(has_data, jnp.maximum(rt_over, rt_pred - runtime), rt_over)
-        seg_pred = regression.predict(seg_stats, ui)
-        seg_under = jnp.where(has_data, jnp.maximum(seg_under, peaks_i - seg_pred), seg_under)
-        rt_stats = regression.update_stats(rt_stats, ui, runtime)
-        seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
-        return (rt_stats, rt_over, seg_stats, seg_under, i + 1), (waste, retries)
-
-    init = (
-        regression.empty_stats(),
-        jnp.asarray(0.0, jnp.float32),
-        regression.empty_stats(k),
-        jnp.zeros((k,), jnp.float32),
-        jnp.asarray(0, jnp.int32),
-    )
-    per_step_vals = {"witt-lr": witt_std, "witt-lr-max": witt_max, "ppm": ppm_orig, "ppm-improved": ppm_imp}
-    xs = (u, y, lengths, peaks_all, per_step_vals)
-    _, (waste, retries) = jax.lax.scan(step, init, xs)
     return waste.T, retries.T  # (M, B)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib", "max_attempts"),
+)
+def simulate_task_ladders(
+    x,
+    y,
+    lengths,
+    default_mib,
+    k_eff=None,
+    *,
+    methods: tuple[str, ...] = ENGINE_METHODS,
+    k: int = 4,
+    interval_s: float = 2.0,
+    factor: float = 2.0,
+    floor_mib: float = 100.0,
+    cap_mib: float = 128 * 1024.0,
+    max_attempts: int = 32,
+):
+    """The cluster scheduler's device program: the same online scan as
+    ``simulate_task_methods``, but returning every execution's full retry
+    ladder instead of aggregate outcomes.
+
+    Returns a dict of per-method, per-execution tensors (A = max_attempts):
+
+    * ``boundaries`` (M, B, k) — prediction step boundaries (attempt-invariant;
+      +inf rows for the k = 1 baselines, which hold their value anyway).
+    * ``values`` (M, B, A, k) — allocation values of each attempt (node-capped).
+    * ``failure_index`` (M, B, A) — OOM-kill sample of each attempt, -1 on the
+      final (successful) attempt.
+    * ``wastage_gib_s`` (M, B, A) — per-attempt wastage.
+    * ``n_attempts`` (M, B) — recorded attempts (retries + 1).
+
+    The host-side scheduler replays placement against these rows; nothing
+    about them depends on placement (predictions see only completed earlier
+    executions of the same task type — identical to the sequential
+    ``run_cluster`` protocol).
+    """
+    _, _, bounds, vbuf, fbuf, wbuf, natt = _simulate_methods(
+        x,
+        y,
+        lengths,
+        default_mib,
+        k_eff,
+        methods=methods,
+        k=k,
+        interval_s=interval_s,
+        factor=factor,
+        floor_mib=floor_mib,
+        cap_mib=cap_mib,
+        max_attempts=max_attempts,
+    )
+    return {
+        "boundaries": bounds.transpose(1, 0, 2),  # (M, B, k)
+        "values": vbuf.transpose(1, 0, 2, 3),  # (M, B, A, k)
+        "failure_index": fbuf.transpose(1, 0, 2),  # (M, B, A)
+        "wastage_gib_s": wbuf.transpose(1, 0, 2),  # (M, B, A)
+        "n_attempts": natt.T,  # (M, B)
+    }
 
 
 @functools.partial(

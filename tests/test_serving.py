@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.allocation import StepAllocation
 from repro.models import init_params
 from repro.serve import AdmissionController
 from repro.serve.admission import cache_bytes_per_token
@@ -29,6 +30,13 @@ def _fake_request_series(prompt_len, decode_steps, bpt_mib, interval):
     return np.asarray([base + i * bpt_mib for i in range(decode_steps)], np.float32)
 
 
+def _growth_series(prompt_len, decode_steps):
+    """Growth-dominated footprint: small prefill, steep KV accumulation —
+    the regime where segment-wise reservations have real headroom over
+    peak-at-admission (a near-flat footprint has none)."""
+    return (prompt_len * 0.08 + 8.0 * np.arange(decode_steps)).astype(np.float32)
+
+
 def test_admission_learns_and_packs_more():
     """Segment-wise packing admits more concurrent requests than
     peak-at-admission reservation for growing (KV-cache) footprints."""
@@ -38,7 +46,7 @@ def test_admission_learns_and_packs_more():
     for _ in range(50):
         plen = int(rng.integers(100, 2000))
         steps = int(60 + plen * 0.05 + rng.normal(0, 2))
-        ctl.observe(plen, _fake_request_series(plen, steps, 0.8, 1.0))
+        ctl.observe(plen, _growth_series(plen, steps))
     alloc = ctl.model.predict(1000.0)
     # predicted allocation must be monotone-growing (KV growth), not flat
     assert alloc.values[-1] > alloc.values[0]
@@ -60,6 +68,62 @@ def test_admission_learns_and_packs_more():
     static_fit = int(10_000.0 // peak)
     assert rejections > 0  # the budget does bind
     assert max_concurrent > static_fit, (max_concurrent, static_fit)
+
+
+class _FixedModel:
+    """Stub predictor: returns a fixed allocation (lets tests construct exact
+    admission geometries)."""
+
+    def __init__(self, alloc):
+        self.alloc = alloc
+        self.n_observations = 1
+
+    def predict(self, _prompt_len):
+        return self.alloc
+
+
+def test_try_admit_probes_active_switch_points():
+    """Regression: an active request stepping up BETWEEN two of the
+    newcomer's boundaries must be seen by admission.  The old try_admit
+    probed only the newcomer's own boundaries and admitted a combination
+    that overshoots the budget at the leader's switch point."""
+    ctl = AdmissionController(hbm_budget_mib=1000.0, k=2, interval_s=1.0)
+    leader = StepAllocation(np.asarray([10.0, 30.0]), np.asarray([100.0, 900.0]))
+    ctl.model = _FixedModel(leader)
+    assert ctl.try_admit("leader", 100, 0.0) is not None
+    # newcomer's probe points (5, 40) straddle the leader's step at t=10:
+    # combined demand on (10, 30] is 900 + 200 = 1100 > 1000.
+    newcomer = StepAllocation(np.asarray([5.0, 40.0]), np.asarray([50.0, 200.0]))
+    ctl.model = _FixedModel(newcomer)
+    assert ctl.try_admit("newcomer", 100, 0.0) is None
+    # the same newcomer fits once the leader is gone
+    ctl.release("leader")
+    assert ctl.try_admit("newcomer", 100, 0.0) is not None
+
+
+def test_try_admit_boundary_probe_at_large_timestamps():
+    """The switch-point probe must step past the boundary even when float64
+    resolution near ``now`` is coarser than any fixed epsilon (a long-lived
+    controller's clock): probing ON the boundary reads the pre-step value."""
+    now = 1.0e12  # ulp ~ 1.2e-4: coarser than any epsilon an implementation might add
+    ctl = AdmissionController(hbm_budget_mib=1000.0, k=2, interval_s=1.0)
+    ctl.model = _FixedModel(StepAllocation(np.asarray([10.0, 30.0]), np.asarray([100.0, 900.0])))
+    assert ctl.try_admit("leader", 100, now) is not None
+    ctl.model = _FixedModel(StepAllocation(np.asarray([5.0, 40.0]), np.asarray([50.0, 200.0])))
+    assert ctl.try_admit("newcomer", 100, now) is None
+
+
+def test_combined_demand_release_at_final_boundary():
+    """A plan holds its last value AT its final boundary (Eq. 1 domain is
+    closed at r_e) and is released immediately after."""
+    ctl = AdmissionController(hbm_budget_mib=10_000.0, k=2, interval_s=1.0)
+    plan_alloc = StepAllocation(np.asarray([10.0, 20.0]), np.asarray([100.0, 500.0]))
+    ctl.model = _FixedModel(plan_alloc)
+    assert ctl.try_admit("r0", 100, 0.0) is not None
+    at_end = ctl._combined_demand((20.0,))
+    just_past = ctl._combined_demand((20.0 + 1e-6,))
+    assert at_end[0] == 500.0
+    assert just_past[0] == 0.0
 
 
 def test_reservation_wastage_segmentwise_lower():
