@@ -9,6 +9,10 @@ figure's headline quantity).
   adaptive_k — per-task online k re-optimization vs fixed k=4 (paper Sec. V)
   kernels — Pallas kernels vs jnp-oracle timing on corpus-scale batches
   admission — serving HBM reservation wastage: segment-wise vs peak
+  serve — arrival-stream serving simulator (Poisson + bursty) through the
+          scalar and batched admission controllers, plus the 256-active
+          decision-throughput microbench; always writes BENCH_serve.json
+          (path override via REPRO_BENCH_SERVE_JSON)
   cluster — scheduler-level dynamic reservations vs static policies, on both
             engines; always writes BENCH_cluster.json (policy, engine,
             makespan, wastage, retries, cold/warm wall seconds; path override
@@ -330,6 +334,139 @@ def bench_admission() -> None:
 
 
 CLUSTER_JSON = os.environ.get("REPRO_BENCH_CLUSTER_JSON", "BENCH_cluster.json")
+SERVE_JSON = os.environ.get("REPRO_BENCH_SERVE_JSON", "BENCH_serve.json")
+
+
+def bench_serve() -> None:
+    """Serving admission at traffic scale: the arrival-stream simulator on
+    both controllers, plus the raw admission-decision microbench.
+
+    Replays a Poisson and a bursty workload through the scalar
+    ``AdmissionController`` oracle and the device-batched
+    ``BatchedAdmissionController`` (identical decisions — parity-tested),
+    recording admitted/rejected/evicted counts, reservation wastage (GiB*s,
+    segment-wise vs peak), and admission-decision latency.  The microbench
+    isolates the decision hot path at >= 256 active requests: batches of 256
+    candidates scored warm, the acceptance bar for the batched engine.
+    Always writes machine-readable rows to ``BENCH_serve.json`` (path
+    override: ``REPRO_BENCH_SERVE_JSON``)."""
+    from repro.serve.admission import AdmissionController, BatchedAdmissionController
+    from repro.serve.stream import StreamConfig, run_stream
+
+    n_req = max(int(400 * SCALE), 60)
+    workloads = {
+        "poisson": StreamConfig(n_requests=n_req, rate_per_s=8.0, seed=SEED),
+        "bursty": StreamConfig(
+            n_requests=n_req,
+            arrival="bursty",
+            rate_per_s=40.0,
+            burst_factor=8.0,
+            hbm_budget_mib=150_000.0,
+            seed=SEED,
+        ),
+    }
+    rows = []
+    for wname, cfg in workloads.items():
+        results = {}
+        for engine in ("scalar", "batched"):
+            res = run_stream(cfg, engine)
+            if engine == "batched":
+                res = run_stream(cfg, engine)  # warm: first run paid jit compiles
+            results[engine] = res
+            _row(
+                f"serve/{wname}/{engine}",
+                res.wall_s * 1e6 / max(len(res.decisions), 1),
+                f"admitted={res.admitted} rejected={res.rejected} evicted={res.evicted} "
+                f"decisions_per_s={res.decisions_per_s:.0f} "
+                f"wastage_gib_s={res.wastage['segmentwise_gib_s']:.1f}",
+                engine=engine,
+            )
+            rows.append(
+                {
+                    "workload": wname,
+                    "engine": engine,
+                    "admitted": res.admitted,
+                    "rejected": res.rejected,
+                    "evicted": res.evicted,
+                    "finished": res.finished,
+                    "segmentwise_gib_s": round(res.wastage["segmentwise_gib_s"], 3),
+                    "peak_reservation_gib_s": round(res.wastage["peak_reservation_gib_s"], 3),
+                    "decisions_per_s": round(res.decisions_per_s, 1),
+                    "p50_latency_us": round(res.p50_latency_s * 1e6, 1),
+                    "p99_latency_us": round(res.p99_latency_s * 1e6, 1),
+                    "wall_s": round(res.wall_s, 4),
+                }
+            )
+        sp = results["batched"].decisions_per_s / max(results["scalar"].decisions_per_s, 1e-9)
+        parity = results["scalar"].decisions == results["batched"].decisions
+        _row(f"serve/{wname}/speedup", 0.0, f"x={sp:.1f} decision_parity={parity}", engine="batch")
+
+    # -- microbench: decision throughput at 256 active requests (warm) ------
+    n_active, batch = 256, 256
+    rng = np.random.default_rng(SEED)
+    # probe just after the last resident admission, well inside every
+    # resident plan's reservation window: the decision must pack against
+    # 256 plans of live demand, not an expired (empty) profile
+    t_probe = n_active * 0.1 + 0.5
+
+    def _mk(cls):
+        c = cls(hbm_budget_mib=1e9, k=4, interval_s=1.0)
+        r = np.random.default_rng(SEED + 1)
+        for _ in range(40):
+            plen = int(r.integers(100, 2000))
+            steps = int(60 + plen * 0.05)
+            c.observe(plen, (plen * 0.02 + 0.6 * np.arange(steps)).astype(np.float32))
+        for i in range(n_active):
+            if c.try_admit(f"res{i}", int(r.integers(100, 2000)), i * 0.1) is None:
+                raise RuntimeError("microbench budget must admit every resident request")
+        if any(p.admitted_at + p.alloc.boundaries[-1] <= t_probe for p in c.active.values()):
+            raise RuntimeError("t_probe must fall inside every resident reservation window")
+        return c
+
+    sc, bc = _mk(AdmissionController), _mk(BatchedAdmissionController)
+    ids = [f"c{i}" for i in range(batch)]
+    plens = [int(rng.integers(100, 2000)) for _ in ids]
+
+    def _round(ctl, batched):
+        if batched:
+            got = ctl.try_admit_many(ids, plens, t_probe)
+        else:
+            got = [ctl.try_admit(i_, p, t_probe) for i_, p in zip(ids, plens)]
+        for i_, g in zip(ids, got):
+            if g is not None:
+                ctl.release(i_)
+
+    _round(bc, True)  # jit warmup
+    us = {}
+    for name, ctl, batched in (("scalar", sc, False), ("batched", bc, True)):
+        t0 = time.time()
+        n = 0
+        while time.time() - t0 < 1.0:
+            _round(ctl, batched)
+            n += 1
+        us[name] = (time.time() - t0) * 1e6 / (n * batch)
+    speedup = us["scalar"] / us["batched"]
+    _row(
+        "serve/microbench",
+        us["batched"],
+        f"n_active={n_active} batch={batch} scalar_us={us['scalar']:.1f} speedup={speedup:.1f}x",
+        engine="batch",
+    )
+    payload = {
+        "scale": SCALE,
+        "seed": SEED,
+        "rows": rows,
+        "microbench": {
+            "n_active": n_active,
+            "batch_size": batch,
+            "scalar_us_per_decision": round(us["scalar"], 2),
+            "batched_us_per_decision": round(us["batched"], 2),
+            "speedup": round(speedup, 2),
+        },
+    }
+    with open(SERVE_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote serving rows to {SERVE_JSON}", file=sys.stderr)
 
 
 def bench_cluster() -> None:
@@ -454,6 +591,7 @@ BENCHES = {
     "adaptive_k": bench_adaptive_k,
     "kernels": bench_kernels,
     "admission": bench_admission,
+    "serve": bench_serve,
     "cluster": bench_cluster,
     "roofline": bench_roofline,
 }

@@ -190,6 +190,143 @@ def demand_exceeds(
     return bool(np.any(prof + alloc.at(t_all - start) > budget))
 
 
+def plan_profile_events(
+    boundaries: np.ndarray, values: np.ndarray, start: float, release: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """One reservation's demand events, exactly as ``step_demand_profile``
+    derives them for a row: ``(times, deltas)`` sorted by time — the start
+    (+v_0), each live switch at ``nextafter`` past its boundary (the step
+    delta), and the release (-v_end, where v_end counts only switches that
+    actually fired before ``release``).  The multiset of events produced for a
+    reservation set equals ``step_demand_profile``'s, which is what lets
+    ``IncrementalDemandProfile`` maintain the same profile under add/remove
+    instead of rebuilding it."""
+    b = np.asarray(boundaries, dtype=np.float64)
+    v = np.asarray(values, dtype=np.float64)
+    sw = start + b
+    live = np.isfinite(b) & (sw < release)
+    steps = np.append(np.diff(v), 0.0)  # step at the final boundary is 0 (hold-last)
+    idx_end = int(np.sum(live))
+    v_end = v[-1] if idx_end >= len(v) else v[idx_end]
+    times = np.concatenate([[start], np.nextafter(sw[live], np.inf), [release]])
+    deltas = np.concatenate([[v[0]], steps[live], [-v_end]])
+    return times, deltas
+
+
+class IncrementalDemandProfile:
+    """``step_demand_profile`` maintained incrementally under add / remove /
+    expire, keyed by owner.
+
+    The full rebuild re-packs every reservation and re-sorts all events
+    (O(R k + E log E) per mutation); this keeps the sorted event arrays live
+    and merges one reservation's ~k+2 events in O(E + k) (``np.searchsorted``
+    + ``np.insert``), recomputing the cumulative sum lazily in one O(E) pass.
+    Event *values* are identical to the rebuilt profile's; only the order of
+    time-tied events can differ, which probes never observe (they read the
+    cumulative sum after all events tied at an instant, see
+    ``step_demand_profile``) beyond float-summation rounding.
+
+    This is the serving admission controller's backing store: thousands of
+    admission decisions per second each touch the profile, so per-decision
+    rebuild cost is the scalar path's bottleneck.
+    """
+
+    def __init__(self):
+        self._times = np.empty(0, dtype=np.float64)
+        self._deltas = np.empty(0, dtype=np.float64)
+        self._codes = np.empty(0, dtype=np.int64)
+        self._next_code = 0
+        self._owners: dict = {}  # owner -> event code
+        self._releases: dict = {}  # owner -> release time (for expire())
+        self._cum: np.ndarray | None = None
+
+    @property
+    def n_events(self) -> int:
+        return len(self._times)
+
+    @property
+    def n_owners(self) -> int:
+        return len(self._owners)
+
+    def __contains__(self, owner) -> bool:
+        return owner in self._owners
+
+    def add(self, owner, boundaries: np.ndarray, values: np.ndarray, start: float, release: float) -> None:
+        """Merge one reservation's events into the profile (O(E + k))."""
+        self.add_many([owner], np.asarray(boundaries)[None], np.asarray(values)[None], [start], [release])
+
+    def add_many(self, owners, boundaries: np.ndarray, values: np.ndarray, starts, releases) -> None:
+        """Merge R reservations in one pass: their events are concatenated
+        (each reservation's own events are already time-sorted), sorted once,
+        and spliced into the live arrays with a single insert — the batch
+        commit path of the admission engine (one O(E + R k log(R k)) splice
+        per admitted batch instead of R separate merges)."""
+        owners = list(owners)
+        dup = [o for o in owners if o in self._owners]
+        if dup or len(set(owners)) != len(owners):
+            raise ValueError(f"owner(s) already hold a reservation: {dup or owners!r}")
+        ev_t, ev_d, ev_c = [], [], []
+        for owner, b, v, s, r in zip(owners, boundaries, values, starts, releases):
+            t, d = plan_profile_events(b, v, float(s), float(r))
+            code = self._next_code
+            self._next_code += 1
+            self._owners[owner] = code
+            self._releases[owner] = float(r)
+            ev_t.append(t)
+            ev_d.append(d)
+            ev_c.append(np.full(len(t), code, dtype=np.int64))
+        if not ev_t:
+            return
+        t = np.concatenate(ev_t)
+        d = np.concatenate(ev_d)
+        c = np.concatenate(ev_c)
+        order = np.argsort(t, kind="stable")
+        t, d, c = t[order], d[order], c[order]
+        pos = np.searchsorted(self._times, t, side="right")
+        self._times = np.insert(self._times, pos, t)
+        self._deltas = np.insert(self._deltas, pos, d)
+        self._codes = np.insert(self._codes, pos, c)
+        self._cum = None
+
+    def remove(self, owner) -> None:
+        """Drop one reservation's events (O(E)); no-op for unknown owners."""
+        code = self._owners.pop(owner, None)
+        if code is None:
+            return
+        self._releases.pop(owner, None)
+        keep = self._codes != code
+        self._times = self._times[keep]
+        self._deltas = self._deltas[keep]
+        self._codes = self._codes[keep]
+        self._cum = None
+
+    def expire(self, now: float) -> None:
+        """Garbage-collect reservations fully released at or before ``now``.
+
+        A released reservation's deltas telescope to zero past its release,
+        so dropping its events cannot change any probe at ``t >= now`` —
+        this only bounds the event count for long-running controllers."""
+        gone = [o for o, r in self._releases.items() if r <= now]
+        if not gone:
+            return
+        codes = np.asarray([self._owners.pop(o) for o in gone], dtype=np.int64)
+        for o in gone:
+            self._releases.pop(o, None)
+        keep = ~np.isin(self._codes, codes)
+        self._times = self._times[keep]
+        self._deltas = self._deltas[keep]
+        self._codes = self._codes[keep]
+        self._cum = None
+
+    def arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(event times (E,), cumulative demand (E+1,)) — read exactly like
+        ``step_demand_profile``'s output: the total at ``t`` is
+        ``cum[np.searchsorted(times, t, side="right")]``."""
+        if self._cum is None:
+            self._cum = np.concatenate([[0.0], np.cumsum(self._deltas)])
+        return self._times, self._cum
+
+
 @dataclasses.dataclass
 class AttemptLadder:
     """The precomputed retry ladder of one execution under one method.

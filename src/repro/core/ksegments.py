@@ -218,3 +218,26 @@ class KSegmentsModel:
         v = np.maximum.accumulate(v)  # monotone: v_s := max(v_s, v_{s-1})
         v = np.maximum(v, cfg.floor_mib)
         return StepAllocation(bounds, v)
+
+    def predict_batch(self, input_sizes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``predict`` over C input sizes: ((C, k) boundaries,
+        (C, k) values), with row ``i`` bit-identical to
+        ``predict(input_sizes[i])`` — every op is the same elementwise IEEE
+        expression, just broadcast over the batch axis.  The batched admission
+        engine relies on that equality to reproduce the scalar controller's
+        decisions exactly."""
+        cfg = self.config
+        k = cfg.k
+        u = np.asarray(input_sizes, dtype=np.float64) - self._x0  # (C,)
+        raw = regression.predict_np(self._rt_stats, u)
+        r_e = np.maximum(raw - max(self._rt_over_err + self._rt_drift, 0.0), cfg.interval_s)
+        bounds = np.arange(1, k + 1, dtype=np.float64)[None, :] * (r_e[:, None] / k)
+        bounds[:, -1] = r_e
+
+        v = regression.predict_np(self._seg_stats, u[:, None])  # (C, k)
+        v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)[None, :]
+        neg = v[:, 0] < 0
+        v[neg, 0] = cfg.floor_mib
+        v = np.maximum.accumulate(v, axis=1)
+        v = np.maximum(v, cfg.floor_mib)
+        return bounds, v

@@ -1,7 +1,17 @@
 # Serving substrate: prefill/decode step builders over sharded KV caches,
 # a continuous-batching engine, and the beyond-paper application of the
-# k-Segments predictor: segment-wise HBM admission control.
+# k-Segments predictor: segment-wise HBM admission control — as the scalar
+# oracle (AdmissionController), the device-batched engine
+# (BatchedAdmissionController.try_admit_many), and the arrival-stream
+# serving simulator (repro.serve.stream) that replays Poisson/bursty
+# workloads through either.
 from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.serve.admission import AdmissionController, RequestPlan
+from repro.serve.admission import AdmissionController, BatchedAdmissionController, RequestPlan
 
-__all__ = ["make_decode_step", "make_prefill_step", "AdmissionController", "RequestPlan"]
+__all__ = [
+    "make_decode_step",
+    "make_prefill_step",
+    "AdmissionController",
+    "BatchedAdmissionController",
+    "RequestPlan",
+]

@@ -10,15 +10,36 @@ the *sum of concurrent step functions* stays under budget at every future
 boundary, instead of reserving every request's worst-case peak at admission
 (the static baseline).  Wastage here = reserved-but-unused HBM x seconds —
 the paper's metric applied to serving.
+
+Two controllers implement the same policy:
+
+* ``AdmissionController`` — the sequential oracle: one Python
+  ``demand_exceeds`` probe per candidate against a profile rebuilt from the
+  active set whenever it changes.
+* ``BatchedAdmissionController`` — the device engine: active plans live in an
+  incrementally-maintained cumulative profile
+  (``core.allocation.IncrementalDemandProfile``), and whole *batches* of
+  candidates are decided by one jitted program — the union-of-switch-points
+  probe becomes a ``searchsorted`` read of the cached profile at a shared
+  padded probe set, and a ``lax.scan`` over the batch threads the
+  within-batch sequential dependency (an admitted candidate's demand is
+  visible to every later candidate, exactly as if the scalar controller had
+  processed them one at a time).  Decision parity with the oracle is exact on
+  randomized streams (``tests/test_serve_batch.py``); the device program runs
+  in float64 (``jax.experimental.enable_x64``) because the profile's
+  ``nextafter`` switch events are below float32 resolution at serving
+  timestamps.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from repro.core.allocation import (
+    IncrementalDemandProfile,
     StepAllocation,
     demand_exceeds,
     pack_step_allocations,
@@ -35,27 +56,60 @@ class RequestPlan:
 
 
 def cache_bytes_per_token(cfg) -> int:
-    """KV-cache bytes per decoded token (attention layers only)."""
+    """KV-cache bytes per decoded token (attention layers only).
+
+    Counts every attention-bearing layer kind (dense / local / global / moe —
+    cross-checked against ``jax.eval_shape`` of ``models.init_cache`` in
+    tests); recurrent kinds (rwkv / rglru) carry O(1) state and contribute
+    nothing per token."""
     dt = 2 if cfg.dtype == "bfloat16" else 4
     n_attn = sum(1 for k in cfg.layer_kinds if k in ("dense", "local", "global", "moe"))
     return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * dt
 
 
-class AdmissionController:
-    """Online segment-wise HBM packing for a decode engine."""
+class _AdmissionBase:
+    """State and accounting shared by the scalar and batched controllers."""
 
     def __init__(self, hbm_budget_mib: float, k: int = 4, interval_s: float = 0.5):
         self.budget = float(hbm_budget_mib)
         self.model = KSegmentsModel(KSegmentsConfig(k=k, interval_s=interval_s, floor_mib=1.0))
         self.active: dict[str, RequestPlan] = {}
         self._static_reserved = 0.0  # what peak-reservation would hold (baseline)
-        self._prof: tuple | None = None  # cached demand profile; dropped on admit/release
 
     # -- learning ----------------------------------------------------------
 
     def observe(self, prompt_len: int, hbm_series_mib: np.ndarray) -> None:
         """Fold a finished request's memory-over-time into the model."""
         self.model.observe(float(prompt_len), np.asarray(hbm_series_mib))
+
+    # -- accounting ---------------------------------------------------------
+
+    def reservation_wastage(self, plans: list[tuple[RequestPlan, np.ndarray, float]]) -> dict:
+        """Compare segment-wise vs peak-at-admission reservation wastage.
+
+        plans: (plan, actual hbm series MiB, interval) per finished request.
+        Returns GiB*s wasted under both policies (the Fig. 7a metric applied
+        to serving)."""
+        seg, peak = 0.0, 0.0
+        for plan, series, interval in plans:
+            t = (np.arange(len(series)) + 0.5) * interval
+            a = plan.alloc.at(t)
+            seg += float(np.sum(np.maximum(a - series, 0.0)) * interval) / 1024.0
+            peak += float(np.sum(np.maximum(plan.alloc.values[-1] - series, 0.0)) * interval) / 1024.0
+        return {"segmentwise_gib_s": seg, "peak_reservation_gib_s": peak}
+
+    def _default_alloc(self) -> StepAllocation:
+        """Before any observation the model has no fit: admit against a flat
+        5%-of-budget placeholder reservation."""
+        return StepAllocation(np.asarray([1.0]), np.asarray([self.budget * 0.05]))
+
+
+class AdmissionController(_AdmissionBase):
+    """Online segment-wise HBM packing for a decode engine (scalar oracle)."""
+
+    def __init__(self, hbm_budget_mib: float, k: int = 4, interval_s: float = 0.5):
+        super().__init__(hbm_budget_mib, k, interval_s)
+        self._prof: tuple | None = None  # cached demand profile; dropped on admit/release
 
     # -- admission ----------------------------------------------------------
 
@@ -99,7 +153,7 @@ class AdmissionController:
         budget undetected.  Steps are right-open (Eq. 1), so switch points are
         probed just after the boundary, where the higher value applies."""
         if self.model.n_observations == 0:
-            alloc = StepAllocation(np.asarray([1.0]), np.asarray([self.budget * 0.05]))
+            alloc = self._default_alloc()
         else:
             alloc = self.model.predict(float(prompt_len))
         times, cum = self._profile()
@@ -120,18 +174,212 @@ class AdmissionController:
             self._static_reserved -= float(plan.alloc.values[-1])
             self._prof = None
 
-    # -- accounting ---------------------------------------------------------
 
-    def reservation_wastage(self, plans: list[tuple[RequestPlan, np.ndarray, float]]) -> dict:
-        """Compare segment-wise vs peak-at-admission reservation wastage.
+# ---------------------------------------------------------------------------
+# Batched admission engine
+# ---------------------------------------------------------------------------
 
-        plans: (plan, actual hbm series MiB, interval) per finished request.
-        Returns GiB*s wasted under both policies (the Fig. 7a metric applied
-        to serving)."""
-        seg, peak = 0.0, 0.0
-        for plan, series, interval in plans:
-            t = (np.arange(len(series)) + 0.5) * interval
-            a = plan.alloc.at(t)
-            seg += float(np.sum(np.maximum(a - series, 0.0)) * interval) / 1024.0
-            peak += float(np.sum(np.maximum(plan.alloc.values[-1] - series, 0.0)) * interval) / 1024.0
-        return {"segmentwise_gib_s": seg, "peak_reservation_gib_s": peak}
+
+@functools.lru_cache(maxsize=None)
+def _admit_program():
+    """The jitted batch-admission program (compiled per padded shape bucket).
+
+    Shapes: P/prof (Pp,) shared probe set and profile reads; per-candidate
+    starts/ends/rels/valid (Cp,); bnd/val/sw/live (Cp, k); valext (Cp, k+1).
+    Padding: P with +inf (masked by isfinite), candidates with
+    valid=False / start=+inf (their window and member masks are empty).
+
+    Per candidate the fit check is the scalar ``demand_exceeds`` with
+    ``inclusive_end=True``: max over every probe point in [start, end] of
+    profile + earlier-admitted-batch demand + own allocation, compared
+    strictly against the budget.  The probe set P is the union of all profile
+    events and every candidate's start/switch instants, so it contains every
+    point where combined demand can rise inside any candidate's window —
+    extra in-window points only re-sample the step function and cannot change
+    the max.  A ``lax.scan`` threads the within-batch dependency: an admitted
+    candidate's demand (table-lookup of its own step function, live on
+    [start, release)) is added to the carry that later candidates probe.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def run(P, prof, starts, ends, rels, bnd, val, valext, sw, live, valid, budget):
+        k = bnd.shape[1]
+        offs = P[None, :, None] - starts[:, None, None]  # (C, Pp, 1)-broadcast offsets
+        idx = jnp.minimum(jnp.sum(bnd[:, None, :] < offs, axis=-1), k - 1)
+        A = jnp.take_along_axis(val, idx, axis=1)  # own demand alloc.at(P - start), (C, Pp)
+        M = (P[None, :] >= starts[:, None]) & (P[None, :] <= ends[:, None]) & jnp.isfinite(P)[None, :]
+        # Member contribution if admitted: the plan's own profile demand —
+        # value after the switches that fired by P, live on [start, release).
+        nst = jnp.sum(live[:, None, :] & (sw[:, None, :] <= P[None, :, None]), axis=-1)
+        inwin = (P[None, :] >= starts[:, None]) & (P[None, :] < rels[:, None])
+        D = jnp.where(inwin, jnp.take_along_axis(valext, nst, axis=1), 0.0)
+
+        def step(extra, row):
+            a, d, m, ok = row
+            admit = ok & ~jnp.any(m & (prof + extra + a > budget))
+            return extra + jnp.where(admit, d, 0.0), admit
+
+        _, admits = jax.lax.scan(step, jnp.zeros_like(P), (A, D, M, valid))
+        return admits
+
+    return jax.jit(run)
+
+
+class BatchedAdmissionController(_AdmissionBase):
+    """Device-batched twin of ``AdmissionController``.
+
+    Same policy, same decisions (exact admit/reject parity on randomized
+    streams — tests/test_serve_batch.py), but the hot path is batched: active
+    plans back an ``IncrementalDemandProfile`` (O(E + k) add/remove instead
+    of a rebuild per decision) and ``try_admit_many`` decides a whole batch
+    of candidates in one compiled program, with sequential-equivalent
+    semantics inside the batch.  ``try_admit`` is the batch-of-one special
+    case, so the two controllers are drop-in interchangeable.
+    """
+
+    def __init__(
+        self,
+        hbm_budget_mib: float,
+        k: int = 4,
+        interval_s: float = 0.5,
+        device_min_batch: int = 32,
+    ):
+        super().__init__(hbm_budget_mib, k, interval_s)
+        self._prof = IncrementalDemandProfile()
+        # Below this batch size the per-call device dispatch outweighs the
+        # batched probe; the host path runs the same ``demand_exceeds``
+        # expressions against the same incremental profile (identical
+        # decisions — both paths are parity-tested against the oracle).
+        self.device_min_batch = int(device_min_batch)
+
+    # -- admission ----------------------------------------------------------
+
+    def try_admit(self, request_id: str, prompt_len: int, now: float) -> RequestPlan | None:
+        """Single-candidate fast path: the oracle's exact probe expressions
+        against the incremental profile — no batch plumbing, no rebuild, so
+        a lone decision is strictly cheaper than the scalar controller's."""
+        if self.model.n_observations == 0:
+            alloc = self._default_alloc()
+        else:
+            alloc = self.model.predict(float(prompt_len))
+        self._prof.expire(float(now))
+        times, cum = self._prof.arrays()
+        end = now + float(alloc.boundaries[-1])
+        if demand_exceeds(times, cum, alloc, now, end, self.budget, inclusive_end=True):
+            return None
+        return self._commit(request_id, alloc, float(now), float(np.nextafter(end, np.inf)))
+
+    def try_admit_many(
+        self, request_ids: list[str], prompt_lens, now
+    ) -> list[RequestPlan | None]:
+        """Decide a batch of candidates in arrival order, one device program.
+
+        ``now`` is a scalar (all candidates share the clock) or a
+        non-decreasing (C,) array of per-candidate arrival times.  Decisions
+        are sequential-equivalent: candidate i is probed against the active
+        profile plus every candidate j < i admitted in this same call."""
+        C = len(request_ids)
+        if C == 0:
+            return []
+        if C == 1:
+            t = now if np.ndim(now) == 0 else float(np.asarray(now)[0])
+            return [self.try_admit(request_ids[0], prompt_lens[0], t)]
+        if self.model.n_observations == 0:
+            d = self._default_alloc()
+            bnd = np.tile(d.boundaries, (C, 1))
+            val = np.tile(d.values, (C, 1))
+        else:
+            bnd, val = self.model.predict_batch(np.asarray(prompt_lens, dtype=np.float64))
+        starts = np.broadcast_to(np.asarray(now, dtype=np.float64), (C,)).astype(np.float64)
+        ends = starts + bnd[:, -1]
+        rels = np.nextafter(ends, np.inf)  # a plan holds through r_e inclusive
+        self._prof.expire(float(starts[0]))
+        if C < self.device_min_batch:
+            return self._admit_host(request_ids, bnd, val, starts, ends, rels)
+        return self._admit_device(request_ids, bnd, val, starts, ends, rels)
+
+    def _admit_host(self, request_ids, bnd, val, starts, ends, rels):
+        """Small-batch path: the oracle's probe against the incremental
+        profile, committing admitted plans as it goes (so within-batch
+        sequencing matches the device scan exactly)."""
+        plans: list[RequestPlan | None] = []
+        for i, rid in enumerate(request_ids):
+            alloc = StepAllocation(bnd[i], val[i])
+            times, cum = self._prof.arrays()
+            if demand_exceeds(
+                times, cum, alloc, float(starts[i]), float(ends[i]), self.budget, inclusive_end=True
+            ):
+                plans.append(None)
+                continue
+            plans.append(self._commit(rid, alloc, float(starts[i]), float(rels[i])))
+        return plans
+
+    def _commit(self, rid: str, alloc: StepAllocation, start: float, release: float) -> RequestPlan:
+        # profile first: add() validates the owner before touching anything,
+        # so re-admitting a live id raises with controller state clean
+        self._prof.add(rid, alloc.boundaries, alloc.values, start, release)
+        plan = RequestPlan(rid, start, alloc)
+        self.active[rid] = plan
+        self._static_reserved += float(alloc.values[-1])
+        return plan
+
+    def _admit_device(self, request_ids, bnd, val, starts, ends, rels):
+        from repro.sim.batch_engine import bucket_size, pad_rows
+
+        C = len(request_ids)
+        sw = np.nextafter(starts[:, None] + bnd, np.inf)  # switch instants (right-open steps)
+        live = np.isfinite(bnd) & (starts[:, None] + bnd < rels[:, None])
+        valext = np.concatenate([val, val[:, -1:]], axis=1)  # hold-last (C, k+1)
+        times, cum = self._prof.arrays()
+
+        # Shared probe set: all profile events + every candidate's start and
+        # switch instants, padded to a bucket so compiled shapes are bounded.
+        P = np.concatenate([times, starts, sw.ravel()])
+        P = np.sort(P)
+        Pp = bucket_size(len(P))
+        prof_at_p = cum[np.searchsorted(times, P, side="right")]
+        P = np.concatenate([P, np.full(Pp - len(P), np.inf)])
+        prof_at_p = np.concatenate([prof_at_p, np.full(Pp - len(prof_at_p), 0.0)])
+        Cp = bucket_size(C)
+        args = (
+            P,
+            prof_at_p,
+            pad_rows(starts, Cp, np.inf),
+            pad_rows(ends, Cp, -np.inf),
+            pad_rows(rels, Cp, -np.inf),
+            pad_rows(bnd, Cp, np.inf),
+            pad_rows(val, Cp, 0.0),
+            pad_rows(valext, Cp, 0.0),
+            pad_rows(sw, Cp, np.inf),
+            pad_rows(live, Cp, False),
+            pad_rows(np.ones(C, dtype=bool), Cp, False),
+        )
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            admits = np.asarray(_admit_program()(*args, self.budget))[:C]
+
+        adm = np.flatnonzero(admits)
+        if len(adm):
+            # profile first: add_many validates owners before touching
+            # anything, so a duplicate id aborts with controller state clean
+            self._prof.add_many(
+                [request_ids[i] for i in adm], bnd[adm], val[adm], starts[adm], rels[adm]
+            )
+        plans: list[RequestPlan | None] = []
+        for i, rid in enumerate(request_ids):
+            if admits[i]:
+                plan = RequestPlan(rid, float(starts[i]), StepAllocation(bnd[i], val[i]))
+                self.active[rid] = plan
+                self._static_reserved += float(val[i, -1])
+                plans.append(plan)
+            else:
+                plans.append(None)
+        return plans
+
+    def release(self, request_id: str) -> None:
+        plan = self.active.pop(request_id, None)
+        if plan is not None:
+            self._static_reserved -= float(plan.alloc.values[-1])
+            self._prof.remove(request_id)

@@ -1,0 +1,259 @@
+"""Arrival-stream serving simulator: admission control under live traffic.
+
+Replays a synthetic decode-request workload — Poisson or bursty arrivals,
+prompt-length-correlated HBM footprints — through an admission controller
+(the scalar ``AdmissionController`` oracle or the device-batched
+``BatchedAdmissionController``), with online learning from finished
+requests.  This is the serving analogue of ``repro.sim.cluster``: where the
+cluster replays workflow corpora against node reservations, this replays a
+request stream against the HBM budget, and measures what the paper's
+segment-wise packing buys at the serving front door:
+
+* admitted / rejected / evicted / finished counts,
+* reservation wastage in GiB*s (segment-wise vs peak-at-admission — the
+  paper's Fig. 7a metric applied to serving),
+* admission-decision latency (p50/p99) and decisions/second.
+
+The event loop is engine-agnostic and deterministic: arrivals are grouped
+into admission batches only between finish events (a request finishing
+mid-stream frees budget, so batching across it would change decisions), and
+both engines see identical batch boundaries, which is what lets
+tests/test_serve_batch.py assert decision-sequence equality.  Eviction
+models the OOM backstop: when *actual* usage (the replayed series, not the
+reservation) exceeds the budget, the youngest requests are killed until it
+fits again — deterministic, so parity covers it too.
+
+``benchmarks/run.py serve`` drives this module and writes ``BENCH_serve.json``
+(see benchmarks/README.md for the schema).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+
+import numpy as np
+
+from repro.serve.admission import AdmissionController, BatchedAdmissionController
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    """One serving workload: budget, model, and arrival process."""
+
+    hbm_budget_mib: float = 50_000.0
+    k: int = 4
+    interval_s: float = 1.0  # decode-step monitoring interval (seconds)
+    n_requests: int = 400  # scheduled arrivals (after warmup)
+    n_warmup: int = 48  # finished requests observed before serving starts
+    rate_per_s: float = 4.0  # mean arrival rate
+    arrival: str = "poisson"  # "poisson" | "bursty"
+    burst_factor: float = 8.0  # bursty: on-phase rate multiplier
+    burst_period_s: float = 40.0  # bursty: on/off cycle length (half each)
+    prompt_len_lo: int = 100
+    prompt_len_hi: int = 2000
+    decode_base: float = 60.0  # decode steps ~ base + per_prompt * prompt_len
+    decode_per_prompt: float = 0.05
+    prefill_mib_per_tok: float = 0.08  # footprint: prefill jump per prompt token
+    growth_mib_per_step: float = 8.0  # KV growth per decode step
+    batch_window_s: float = 0.25  # arrivals this close admit as one batch
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Arrival:
+    t: float
+    request_id: str
+    prompt_len: int
+    series: np.ndarray  # actual HBM MiB per decode step (ground truth replay)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    engine: str
+    admitted: int
+    rejected: int
+    evicted: int
+    finished: int
+    decisions: list[tuple[str, bool]]  # (request_id, admitted) in decision order
+    wastage: dict  # segmentwise_gib_s / peak_reservation_gib_s over finished requests
+    makespan_s: float
+    wall_s: float  # wall time spent inside admission decisions
+    decisions_per_s: float
+    p50_latency_s: float
+    p99_latency_s: float
+
+
+def _series(cfg: StreamConfig, prompt_len: int, rng: np.random.Generator) -> np.ndarray:
+    """Growth-dominated footprint: prefill jump then linear KV accumulation —
+    the regime where segment-wise reservations have headroom over peak."""
+    steps = max(int(cfg.decode_base + prompt_len * cfg.decode_per_prompt + rng.normal(0, 2)), 4)
+    return (prompt_len * cfg.prefill_mib_per_tok + cfg.growth_mib_per_step * np.arange(steps)).astype(
+        np.float32
+    )
+
+
+def generate_arrivals(cfg: StreamConfig) -> tuple[list[Arrival], list[Arrival]]:
+    """(warmup requests, serving arrivals), deterministic in the seed.
+
+    Poisson: exponential inter-arrival gaps at ``rate_per_s``.  Bursty: an
+    on/off modulated Poisson process — ``burst_factor`` x the base rate for
+    the first half of every ``burst_period_s`` cycle, the base rate for the
+    second — which stresses admission exactly when the budget is tightest."""
+    rng = np.random.default_rng(cfg.seed)
+    warm = []
+    for i in range(cfg.n_warmup):
+        plen = int(rng.integers(cfg.prompt_len_lo, cfg.prompt_len_hi))
+        warm.append(Arrival(0.0, f"warm{i}", plen, _series(cfg, plen, rng)))
+    arrivals = []
+    t = 0.0
+    for i in range(cfg.n_requests):
+        if cfg.arrival == "poisson":
+            rate = cfg.rate_per_s
+        elif cfg.arrival == "bursty":
+            phase = (t % cfg.burst_period_s) / cfg.burst_period_s
+            rate = cfg.rate_per_s * (cfg.burst_factor if phase < 0.5 else 1.0)
+        else:
+            raise ValueError(f"unknown arrival process {cfg.arrival!r}")
+        t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.integers(cfg.prompt_len_lo, cfg.prompt_len_hi))
+        arrivals.append(Arrival(t, f"r{i}", plen, _series(cfg, plen, rng)))
+    return warm, arrivals
+
+
+def make_controller(cfg: StreamConfig, engine: str):
+    cls = {"scalar": AdmissionController, "batched": BatchedAdmissionController}[engine]
+    return cls(hbm_budget_mib=cfg.hbm_budget_mib, k=cfg.k, interval_s=cfg.interval_s)
+
+
+def _actual_usage(live: dict, t: float, interval_s: float) -> float:
+    """Ground-truth HBM in use at ``t``: each live request's replayed series
+    sample at its elapsed time."""
+    tot = 0.0
+    for start, series in live.values():
+        idx = min(int((t - start) / interval_s), len(series) - 1)
+        tot += float(series[max(idx, 0)])
+    return tot
+
+
+def run_stream(
+    cfg: StreamConfig, engine: str = "batched", controller=None, arrivals=None
+) -> StreamResult:
+    """Replay one workload through one admission engine.
+
+    The loop interleaves three event kinds in time order: request finishes
+    (release + observe — online learning), admission batches (consecutive
+    arrivals within ``batch_window_s`` and not straddling a finish), and the
+    eviction backstop after every state change.  All policy decisions are
+    identical across engines by construction; only the admission call is
+    engine-specific.
+
+    ``arrivals`` overrides the generated workload with a pre-built
+    ``(warmup, serving arrivals)`` pair — e.g. to replay distorted series
+    (the eviction-parity tests) or recorded traces."""
+    warm, arrivals = arrivals if arrivals is not None else generate_arrivals(cfg)
+    ctl = controller if controller is not None else make_controller(cfg, engine)
+    for a in warm:
+        ctl.observe(a.prompt_len, a.series)
+
+    finishes: list[tuple[float, str]] = []  # (finish time, request id) heap
+    live: dict[str, tuple[float, np.ndarray]] = {}  # rid -> (admitted_at, series)
+    info: dict[str, Arrival] = {}
+    plans: dict[str, object] = {}
+    decisions: list[tuple[str, bool]] = []
+    latencies: list[float] = []
+    finished_plans = []
+    admitted = rejected = evicted = finished = 0
+    evicted_ids: set[str] = set()
+    makespan = 0.0
+    wall = 0.0
+
+    def evict_until_fits(t: float) -> None:
+        nonlocal evicted
+        # youngest-first kill: the newest admissions are the cheapest to
+        # redo and the likeliest mispredictions under a fresh model
+        while live and _actual_usage(live, t, cfg.interval_s) > cfg.hbm_budget_mib:
+            rid = max(live, key=lambda r: (live[r][0], r))
+            live.pop(rid)
+            plans.pop(rid, None)
+            ctl.release(rid)
+            evicted_ids.add(rid)
+            evicted += 1
+
+    i = 0
+    n = len(arrivals)
+    while i < n or finishes:
+        next_fin = finishes[0][0] if finishes else np.inf
+        next_arr = arrivals[i].t if i < n else np.inf
+        if next_fin <= next_arr:
+            t, rid = heapq.heappop(finishes)
+            if rid in evicted_ids:
+                continue
+            start, series = live.pop(rid)
+            a = info.pop(rid)
+            ctl.release(rid)
+            ctl.observe(a.prompt_len, series)
+            finished_plans.append((plans.pop(rid), series, cfg.interval_s))
+            finished += 1
+            makespan = max(makespan, t)
+            # surviving requests matured since the last check: the backstop
+            # fires at finishes too, not only at admission commits
+            evict_until_fits(t)
+            continue
+        # admission batch: consecutive arrivals inside the window, never
+        # straddling a finish (releasing budget mid-batch would change
+        # decisions, so the batch boundary is part of the policy)
+        j = i
+        t0 = arrivals[i].t
+        while j < n and arrivals[j].t <= t0 + cfg.batch_window_s and arrivals[j].t < next_fin:
+            j += 1
+        batch = arrivals[i:j]
+        if engine == "batched":
+            t_w = time.perf_counter()
+            got = ctl.try_admit_many(
+                [a.request_id for a in batch],
+                [a.prompt_len for a in batch],
+                np.asarray([a.t for a in batch]),
+            )
+            dt = time.perf_counter() - t_w
+            wall += dt
+            latencies.extend([dt / len(batch)] * len(batch))
+        else:
+            got = []
+            for a in batch:
+                t_w = time.perf_counter()
+                got.append(ctl.try_admit(a.request_id, a.prompt_len, a.t))
+                dt = time.perf_counter() - t_w
+                wall += dt
+                latencies.append(dt)
+        for a, plan in zip(batch, got):
+            decisions.append((a.request_id, plan is not None))
+            if plan is None:
+                rejected += 1
+                continue
+            admitted += 1
+            live[a.request_id] = (a.t, a.series)
+            info[a.request_id] = a
+            plans[a.request_id] = plan
+            heapq.heappush(finishes, (a.t + len(a.series) * cfg.interval_s, a.request_id))
+        evict_until_fits(batch[-1].t)
+        i = j
+
+    wastage = ctl.reservation_wastage(finished_plans)
+    n_dec = max(len(decisions), 1)
+    lat = np.asarray(latencies) if latencies else np.zeros(1)
+    return StreamResult(
+        engine=engine,
+        admitted=admitted,
+        rejected=rejected,
+        evicted=evicted,
+        finished=finished,
+        decisions=decisions,
+        wastage=wastage,
+        makespan_s=float(makespan),
+        wall_s=float(wall),
+        decisions_per_s=float(n_dec / max(wall, 1e-12)),
+        p50_latency_s=float(np.percentile(lat, 50)),
+        p99_latency_s=float(np.percentile(lat, 99)),
+    )

@@ -2,6 +2,10 @@
 # (calibrated to the paper's eager/sarek statistics), the online learning
 # simulator reproducing the paper's evaluation protocol, and the batched
 # lax.scan evaluation engine that runs the whole grid as device programs.
+# The engine's packing helpers (batch_engine.bucket_size/pad_rows) are also
+# the shape-bucketing layer of the serving admission engine
+# (repro.serve.admission.BatchedAdmissionController); batch_engine stays a
+# deferred import so the numpy-only simulator paths never pull in jax.
 from repro.sim.traces import (
     Execution,
     PaddedTaskBatch,

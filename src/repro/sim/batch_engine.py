@@ -44,9 +44,18 @@ from repro.core.allocation import AttemptLadder
 from repro.core.ksegments import KSegmentsConfig
 from repro.sim.jax_sim import MAX_RETRIES, ENGINE_METHODS, simulate_task_ladders, simulate_task_methods
 from repro.sim.simulator import SimConfig, TaskResult
-from repro.sim.traces import TaskTrace, WorkflowTrace, pack_traces
+from repro.sim.traces import TaskTrace, WorkflowTrace, bucket_size, pack_traces
 
 GRID_METHODS = tuple(m for m in ENGINE_METHODS if m != "witt-lr-max")
+
+
+def pad_rows(a: np.ndarray, n: int, fill: float) -> np.ndarray:
+    """Pad axis 0 of ``a`` to ``n`` rows with ``fill`` (returns ``a``
+    unchanged when already that size)."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0], *a.shape[1:]), fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
 
 
 @functools.lru_cache(maxsize=None)

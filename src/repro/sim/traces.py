@@ -77,6 +77,15 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def bucket_size(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor): the static-shape bucket that
+    bounds the number of compiled variants for data-dependent batch sizes —
+    the same rounding ``pack_traces`` applies to series lengths, also used
+    by the serving admission engine (candidate-batch and probe-set axes of
+    its device program, re-exported via ``sim.batch_engine``)."""
+    return _next_pow2(max(int(n), floor))
+
+
 @dataclasses.dataclass
 class PaddedTaskBatch:
     """A bucket of task types padded to one (B, T) shape for vmapped engines.

@@ -121,3 +121,30 @@ def test_property_alloc_always_valid(k, seed):
     assert np.all(alloc.values > 0)
     assert np.all(np.diff(alloc.values) >= 0)
     assert alloc.boundaries[-1] >= 2.0 - 1e-9  # at least one interval
+
+
+def _check_predict_batch_bitwise(seed, error_mode):
+    """predict_batch rows must be BIT-identical to per-call predict: the
+    batched admission engine relies on that equality for decision parity."""
+    rng = np.random.default_rng(seed)
+    m = KSegmentsModel(KSegmentsConfig(k=int(rng.integers(1, 6)), error_mode=error_mode))
+    for _ in range(int(rng.integers(2, 20))):
+        m.observe(float(rng.uniform(1, 1e4)), rng.uniform(1, 8000, int(rng.integers(3, 120))))
+    xs = rng.uniform(1, 2e4, 16)
+    bounds, values = m.predict_batch(xs)
+    for i, x in enumerate(xs):
+        one = m.predict(float(x))
+        np.testing.assert_array_equal(bounds[i], one.boundaries)
+        np.testing.assert_array_equal(values[i], one.values)
+
+
+def test_predict_batch_bitwise_matches_predict():
+    for seed in (0, 1, 2, 3):
+        for mode in ("progressive", "insample"):
+            _check_predict_batch_bitwise(seed, mode)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["progressive", "insample"]))
+def test_property_predict_batch_bitwise(seed, mode):
+    _check_predict_batch_bitwise(seed, mode)

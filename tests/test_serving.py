@@ -3,10 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
+from repro.configs.registry import ARCHS
 from repro.core.allocation import StepAllocation
-from repro.models import init_params
+from repro.models import init_cache, init_params
 from repro.serve import AdmissionController
 from repro.serve.admission import cache_bytes_per_token
 from repro.serve.engine import greedy_generate
@@ -149,3 +151,65 @@ def test_cache_bytes_per_token():
     assert cache_bytes_per_token(cfg) == 88 * 2 * 8 * 128 * 2
     rwkv = get_config("rwkv6-1.6b")
     assert cache_bytes_per_token(rwkv) == 0  # attention-free: O(1) state
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_cache_bytes_per_token_matches_init_cache(name):
+    """Cross-check the analytic count against ``jax.eval_shape`` of the real
+    cache skeleton for every registered architecture, so layer-kind counting
+    (dense/local/global/moe vs O(1) recurrent state) can't silently drift.
+
+    KV bytes per token = the k/v leaves' bytes divided by (batch * max_len);
+    those are exactly the float leaves shaped (..., batch, max_len, kv_heads,
+    head_dim) — possibly under a leading scan-stack axis — while ``pos``
+    bookkeeping and recurrent state carry no per-token payload.  ``max_len``
+    is a prime no other cache dimension uses and stays below every window
+    size, so the axis match is unambiguous and local layers are not
+    window-clipped."""
+    cfg = ARCHS[name]
+    batch, max_len = 1, 7
+    assert max_len <= cfg.window_size
+    for dim in (cfg.num_kv_heads, cfg.head_dim, cfg.conv_width - 1, cfg.rnn_width, cfg.d_model):
+        assert dim != max_len, "pick a max_len that no other cache dimension collides with"
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    kv_bytes = sum(
+        int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(shapes)
+        if leaf.ndim >= 4 and leaf.shape[-3] == max_len and not jnp.issubdtype(leaf.dtype, jnp.integer)
+    )
+    assert kv_bytes % (batch * max_len) == 0
+    assert kv_bytes // (batch * max_len) == cache_bytes_per_token(cfg), name
+
+
+def test_admission_profile_cache_invalidation():
+    """Regression: every state change that alters demand must drop the
+    cached profile — admit and release change the active set (the next probe
+    must see it), observe changes the model (the next prediction must see
+    it)."""
+    ctl = AdmissionController(hbm_budget_mib=1000.0, k=2, interval_s=1.0)
+    big = StepAllocation(np.asarray([10.0, 30.0]), np.asarray([300.0, 900.0]))
+    ctl.model = _FixedModel(big)
+
+    # admit drops the cache: a second identical request must see the first
+    assert ctl.try_admit("a", 100, 0.0) is not None
+    assert ctl._prof is None
+    assert ctl._combined_demand((15.0,))[0] == 900.0
+    assert ctl.try_admit("b", 100, 0.0) is None  # 2 x 900 > 1000 seen
+
+    # release drops the cache: the same request fits again afterwards
+    assert ctl._prof is not None  # probe above cached it
+    ctl.release("a")
+    assert ctl._prof is None
+    assert ctl._combined_demand((15.0,))[0] == 0.0
+    assert ctl.try_admit("c", 100, 0.0) is not None
+
+    # observe retrains the model: the next predict must reflect the new
+    # history even with a probe-warmed profile cache
+    real = AdmissionController(hbm_budget_mib=10_000.0, k=2, interval_s=1.0)
+    for _ in range(3):
+        real.observe(100, np.full(10, 50.0, np.float32))
+    low = float(real.model.predict(100.0).values[-1])
+    real._profile()  # warm the cache
+    real.observe(100, np.full(10, 5000.0, np.float32))
+    high = float(real.model.predict(100.0).values[-1])
+    assert high > low  # the spike raised the prediction immediately
