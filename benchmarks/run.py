@@ -473,27 +473,40 @@ def bench_cluster() -> None:
     """Beyond-paper: cluster-level scheduling with dynamic reservations
     (the paper's Sec. IV-E 'resource managers must support adjustments').
 
-    Times BOTH engines on the identical multi-policy workload — the
-    sequential per-task predictor loop (progressive offsets, so the engines
-    are comparable cell by cell) and the batched device-table scheduler,
-    which computes every policy's retry ladders in one shared pass — and
-    always writes machine-readable rows (policy, engine, makespan, wastage,
-    retries, cold/warm wall seconds) to ``BENCH_cluster.json`` (path override:
+    Times BOTH engines on the identical multi-policy workload (the full
+    sarek + eager corpus, ``run_cluster``'s own ``max_tasks_per_type``
+    scaled by ``REPRO_BENCH_SCALE``) — the sequential per-task predictor
+    loop (progressive offsets, so the engines are comparable cell by cell)
+    and the batched device scheduler, which computes every policy's retry
+    ladders in one shared pass and places them with the wait-epoch device
+    program — and always writes machine-readable rows (policy, engine,
+    makespan, wastage, retries, cold/warm wall seconds, placement-program
+    counters) to ``BENCH_cluster.json`` (path override:
     ``REPRO_BENCH_CLUSTER_JSON``)."""
     from repro.core.ksegments import KSegmentsConfig
     from repro.sim.cluster import run_cluster, run_cluster_batched
 
-    wfs = _suite()[:1]
+    wfs = _suite()
     policies = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
-    kw = dict(n_nodes=4, max_tasks_per_type=max(int(60 * SCALE), 8), train_frac=0.5)
+    # 16 nodes: the production-shaped cluster the device placement targets —
+    # the program probes the whole (candidate x node) matrix per dispatch
+    # while the scalar oracle pays one fits probe per node per wait step
+    kw = dict(n_nodes=16, max_tasks_per_type=max(int(120 * SCALE), 8), train_frac=0.5)
     cfg = KSegmentsConfig(error_mode="progressive")
 
     t0 = time.time()
     run_cluster_batched(wfs, policies, **kw)
     cold = time.time() - t0
-    t0 = time.time()
-    res_b = run_cluster_batched(wfs, policies, **kw)
-    warm = time.time() - t0
+    # warm: best of two passes (single-sample walls on shared CI hosts jitter
+    # by 2x; the minimum is the standard steady-state estimator)
+    warm = float("inf")
+    place_stats: dict = {}
+    for _ in range(2):
+        stats_i: dict = {}
+        t0 = time.time()
+        res_b = run_cluster_batched(wfs, policies, placement_stats=stats_i, **kw)
+        if time.time() - t0 < warm:
+            warm, place_stats = time.time() - t0, stats_i
     res_py: dict = {}
     py_wall: dict = {}
     t0 = time.time()
@@ -550,11 +563,24 @@ def bench_cluster() -> None:
         "batch_cold_wall_s": round(cold, 4),
         "batch_warm_wall_s": round(warm, 4),
         "warm_speedup": round(wall_py / warm, 2),
+        "placement": {
+            "rows": place_stats.get("rows", 0),
+            "program_calls": place_stats.get("program_calls", 0),
+            "program_wall_s": round(place_stats.get("program_wall_s", 0.0), 4),
+            "waits": place_stats.get("waits", 0),
+        },
         "rows": rows,
     }
     with open(CLUSTER_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote cluster rows to {CLUSTER_JSON}", file=sys.stderr)
+    _row(
+        "cluster/placement_program",
+        place_stats.get("program_wall_s", 0.0) * 1e6 / max(place_stats.get("program_calls", 1), 1),
+        f"calls={place_stats.get('program_calls', 0)} waits={place_stats.get('waits', 0)} "
+        f"rows={place_stats.get('rows', 0)}",
+        engine="batch",
+    )
 
 
 def bench_roofline() -> None:
@@ -598,6 +624,7 @@ BENCHES = {
 
 
 def main() -> None:
+    global SCALE
     args = sys.argv[1:]
     json_path = None
     if "--json" in args:
@@ -607,6 +634,11 @@ def main() -> None:
         except IndexError:
             raise SystemExit("--json requires a path argument")
         del args[i : i + 2]
+    if "--smoke" in args:
+        # CI-sized run: small corpus, same code paths (used by the workflow's
+        # cluster step so placement-perf regressions surface in CI logs)
+        args.remove("--smoke")
+        SCALE = min(SCALE, 0.12)
     names = args or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -1,0 +1,80 @@
+"""Version-compat shims for the pinned jax.
+
+The container pins jax 0.4.37, which predates the mesh-context API the
+model/launch code targets (``jax.set_mesh`` / ``jax.sharding.use_mesh`` /
+``jax.sharding.get_abstract_mesh``).  Every mesh-context read or entry in
+this repo goes through this module so the same source runs on both API
+generations:
+
+* on new jax the shims delegate to the real functions;
+* on 0.4.x they fall back to the thread-local resource env (``with mesh:``
+  — the legacy ``Mesh`` context manager — and its ``physical_mesh``), which
+  carries the same axis names/shape the sharding helpers consume.
+
+Also home to the opt-in persistent compilation cache: the batched engines
+compile ~12 bucket shapes (~20 s cold on CPU); with ``REPRO_COMPILE_CACHE``
+set to a directory, XLA executables persist across processes and a warm
+process deserializes them instead of recompiling (see
+tests/test_compile_cache.py).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient mesh: ``jax.sharding.get_abstract_mesh()`` when it exists,
+    else the 0.4.x thread-local physical mesh (an *empty* ``Mesh`` outside
+    any mesh context — callers check ``mesh.empty``, which both objects
+    provide, as well as ``axis_names`` / ``shape``)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh for sharding
+    constraints: ``jax.sharding.use_mesh`` / ``jax.set_mesh`` when present;
+    on 0.4.x the ``Mesh`` object itself (its legacy context manager installs
+    the resource env that ``with_sharding_constraint`` consults)."""
+    fn = getattr(jax.sharding, "use_mesh", None) or getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+# The newer spelling some call sites prefer; identical semantics here.
+set_mesh = use_mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` when it exists, else the 0.4.x experimental one
+    (same call contract for the keyword form the model code uses)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def enable_compile_cache(path: str | None = None) -> str | None:
+    """Point jax's persistent compilation cache at ``path`` (default: the
+    ``REPRO_COMPILE_CACHE`` env var; no-op when neither is set).  Thresholds
+    drop to zero so even sub-second bucket programs are cached — the batched
+    engines' cold start is dominated by many small compiles, not one big
+    one.  Returns the cache directory actually enabled, or None."""
+    path = path or os.environ.get("REPRO_COMPILE_CACHE")
+    if not path:
+        return None
+    path = os.path.expanduser(path)  # env vars arrive tilde-unexpanded (CI sets ~/.cache/...)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    return path

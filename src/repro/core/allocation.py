@@ -190,6 +190,58 @@ def demand_exceeds(
     return bool(np.any(prof + alloc.at(t_all - start) > budget))
 
 
+def demand_exceeds_many(
+    times: np.ndarray,
+    cum: np.ndarray,
+    alloc: StepAllocation,
+    starts: np.ndarray,
+    duration: float,
+    budget: float,
+) -> np.ndarray:
+    """``demand_exceeds`` vectorized over S candidate start times of ONE
+    allocation, with the cluster scheduler's right-open window
+    ``[start, start + duration)``.
+
+    Evaluates the exact probe expressions of the scalar function — the start,
+    each own switch instant passing both of its filters (``b < end - start``
+    and ``probe < end``), and every profile event strictly inside the window,
+    all read via ``searchsorted(..., "right")`` — so a True/False here is
+    bit-identical to S scalar calls.  This is the blocked-candidate wait
+    loop of the batched cluster scheduler: when a queued attempt fits no
+    node, every future completion instant is probed in one pass instead of
+    one ``demand_exceeds`` per popped event (see ``sim.cluster``).
+
+    Returns a (S,) bool array: True where demand would exceed ``budget``.
+    """
+    b = np.asarray(alloc.boundaries, dtype=np.float64)
+    v = np.asarray(alloc.values, dtype=np.float64)
+    k = len(b)
+    starts = np.asarray(starts, dtype=np.float64)
+    ends = starts + duration
+
+    def at(offsets):  # alloc.at, broadcast over any shape
+        idx = np.minimum(np.searchsorted(b, offsets, side="left"), k - 1)
+        return v[idx]
+
+    # own probes: [start] + nextafter(start + b) under the scalar's filters
+    p_sw = np.nextafter(starts[:, None] + b[None, :], np.inf)  # (S, k)
+    ok_sw = (b[None, :] < (ends - starts)[:, None]) & (p_sw < ends[:, None])
+    own_p = np.concatenate([starts[:, None], p_sw], axis=1)  # (S, k+1)
+    own_ok = np.concatenate([np.ones((len(starts), 1), dtype=bool), ok_sw], axis=1)
+    prof_own = cum[np.searchsorted(times, own_p, side="right")]
+    over = np.any(own_ok & (prof_own + at(own_p - starts[:, None]) > budget), axis=1)
+    # profile events strictly inside each window (the scalar's times[lo:hi]);
+    # only the slice any window can reach participates in the (S, E) probe
+    lo = np.searchsorted(times, starts.min(), side="right")
+    hi = np.searchsorted(times, ends.max(), side="left")
+    if hi > lo:
+        ev = times[lo:hi]
+        in_win = (ev[None, :] > starts[:, None]) & (ev[None, :] < ends[:, None])
+        prof_ev = cum[np.searchsorted(times, ev, side="right")]  # after each tie group
+        over |= np.any(in_win & (prof_ev[None, :] + at(ev[None, :] - starts[:, None]) > budget), axis=1)
+    return over
+
+
 def plan_profile_events(
     boundaries: np.ndarray, values: np.ndarray, start: float, release: float
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -239,6 +291,10 @@ class IncrementalDemandProfile:
         self._owners: dict = {}  # owner -> event code
         self._releases: dict = {}  # owner -> release time (for expire())
         self._cum: np.ndarray | None = None
+        # lower bound on min(self._releases.values()); lets expire() return
+        # without scanning the owner dict (the scheduler calls it per epoch).
+        # Stale-low is safe: the fast path just isn't taken.
+        self._min_release = np.inf
 
     @property
     def n_events(self) -> int:
@@ -252,40 +308,81 @@ class IncrementalDemandProfile:
         return owner in self._owners
 
     def add(self, owner, boundaries: np.ndarray, values: np.ndarray, start: float, release: float) -> None:
-        """Merge one reservation's events into the profile (O(E + k))."""
-        self.add_many([owner], np.asarray(boundaries)[None], np.asarray(values)[None], [start], [release])
+        """Merge one reservation's events into the profile (O(E + k)) —
+        the scalar twin of ``add_many``, skipping its batch plumbing (the
+        congested cluster scheduler commits one reservation per wait)."""
+        if owner in self._owners:
+            raise ValueError(f"owner(s) already hold a reservation: [{owner!r}]")
+        t, d = plan_profile_events(boundaries, values, float(start), float(release))
+        code = self._next_code
+        self._next_code += 1
+        self._owners[owner] = code
+        self._releases[owner] = float(release)
+        self._min_release = min(self._min_release, float(release))
+        self._splice(t, d, np.full(len(t), code, dtype=np.int64))
 
     def add_many(self, owners, boundaries: np.ndarray, values: np.ndarray, starts, releases) -> None:
         """Merge R reservations in one pass: their events are concatenated
         (each reservation's own events are already time-sorted), sorted once,
         and spliced into the live arrays with a single insert — the batch
-        commit path of the admission engine (one O(E + R k log(R k)) splice
-        per admitted batch instead of R separate merges)."""
+        commit path of the admission engine and of the batched cluster
+        scheduler's per-epoch placements (one O(E + R k log(R k)) splice per
+        batch instead of R separate merges).
+
+        Event construction is the fully-vectorized twin of
+        ``plan_profile_events`` — row-major flattening keeps each row's
+        events grouped in commit order, so with the stable time sort the
+        spliced arrays are **bit-identical** to R sequential ``add`` calls
+        (time-tied events land in the same order a ``side="right"`` insert
+        would put them)."""
         owners = list(owners)
         dup = [o for o in owners if o in self._owners]
         if dup or len(set(owners)) != len(owners):
             raise ValueError(f"owner(s) already hold a reservation: {dup or owners!r}")
-        ev_t, ev_d, ev_c = [], [], []
-        for owner, b, v, s, r in zip(owners, boundaries, values, starts, releases):
-            t, d = plan_profile_events(b, v, float(s), float(r))
-            code = self._next_code
-            self._next_code += 1
-            self._owners[owner] = code
-            self._releases[owner] = float(r)
-            ev_t.append(t)
-            ev_d.append(d)
-            ev_c.append(np.full(len(t), code, dtype=np.int64))
-        if not ev_t:
+        R = len(owners)
+        if R == 0:
             return
-        t = np.concatenate(ev_t)
-        d = np.concatenate(ev_d)
-        c = np.concatenate(ev_c)
+        b = np.asarray(boundaries, dtype=np.float64).reshape(R, -1)
+        v = np.asarray(values, dtype=np.float64).reshape(R, -1)
+        starts = np.asarray(starts, dtype=np.float64).reshape(R)
+        rels = np.asarray(releases, dtype=np.float64).reshape(R)
+        codes = np.arange(self._next_code, self._next_code + R, dtype=np.int64)
+        self._next_code += R
+        for o, c_, rl in zip(owners, codes, rels):
+            self._owners[o] = int(c_)
+            self._releases[o] = float(rl)
+        self._min_release = min(self._min_release, float(rels.min()))
+        sw = starts[:, None] + b
+        live = np.isfinite(b) & (sw < rels[:, None])
+        steps = np.concatenate([np.diff(v, axis=1), np.zeros((R, 1))], axis=1)
+        vext = np.concatenate([v, v[:, -1:]], axis=1)
+        v_end = np.take_along_axis(vext, np.sum(live, axis=1)[:, None], axis=1)[:, 0]
+        times = np.concatenate([starts[:, None], np.nextafter(sw, np.inf), rels[:, None]], axis=1)
+        deltas = np.concatenate([v[:, :1], steps, -v_end[:, None]], axis=1)
+        mask = np.concatenate([np.ones((R, 1), bool), live, np.ones((R, 1), bool)], axis=1)
+        m = mask.ravel()
+        t = times.ravel()[m]
+        d = deltas.ravel()[m]
+        c = np.repeat(codes, mask.shape[1])[m]
         order = np.argsort(t, kind="stable")
-        t, d, c = t[order], d[order], c[order]
-        pos = np.searchsorted(self._times, t, side="right")
-        self._times = np.insert(self._times, pos, t)
-        self._deltas = np.insert(self._deltas, pos, d)
-        self._codes = np.insert(self._codes, pos, c)
+        self._splice(t[order], d[order], c[order])
+
+    def _splice(self, t: np.ndarray, d: np.ndarray, c: np.ndarray) -> None:
+        """Merge time-sorted events into the live arrays — one manual splice
+        for all three (np.insert's index normalization costs more than the
+        merge itself at this size), ``side="right"`` so time-tied newcomers
+        land after existing events."""
+        E, n = len(self._times), len(t)
+        pos = np.searchsorted(self._times, t, side="right") + np.arange(n)
+        old_pos = np.ones(E + n, dtype=bool)
+        old_pos[pos] = False
+        times = np.empty(E + n)
+        deltas = np.empty(E + n)
+        codes = np.empty(E + n, dtype=np.int64)
+        times[pos], times[old_pos] = t, self._times
+        deltas[pos], deltas[old_pos] = d, self._deltas
+        codes[pos], codes[old_pos] = c, self._codes
+        self._times, self._deltas, self._codes = times, deltas, codes
         self._cum = None
 
     def remove(self, owner) -> None:
@@ -306,12 +403,15 @@ class IncrementalDemandProfile:
         A released reservation's deltas telescope to zero past its release,
         so dropping its events cannot change any probe at ``t >= now`` —
         this only bounds the event count for long-running controllers."""
+        if now < self._min_release:
+            return
         gone = [o for o, r in self._releases.items() if r <= now]
         if not gone:
             return
         codes = np.asarray([self._owners.pop(o) for o in gone], dtype=np.int64)
         for o in gone:
             self._releases.pop(o, None)
+        self._min_release = min(self._releases.values(), default=np.inf)
         keep = ~np.isin(self._codes, codes)
         self._times = self._times[keep]
         self._deltas = self._deltas[keep]

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ModelConfig
 
 NEG_INF = -1.0e30
@@ -32,7 +33,7 @@ def maybe_constrain(x, spec: P):
     """with_sharding_constraint if a mesh is in context, with per-dim
     sanitization: axes that are absent from the mesh or do not divide the
     dimension are dropped (single-device smoke tests run without a mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)
@@ -57,7 +58,7 @@ def act_batch_axes(cfg: ModelConfig) -> tuple[str, ...]:
     pod-sized batch (e.g. 256 on the 2x16x16 mesh) still shards 256 ways
     within each pod and the sanitizer drops only "pod" (which then carries
     pure parameter-FSDP + gradient sync) instead of idling the model axis."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     names = mesh.axis_names if mesh is not None else ()
     if cfg.parallelism == "fsdp":
         order = ("data", "model", "pod")
@@ -82,7 +83,7 @@ def constrain_logits(cfg: ModelConfig, logits):
     (A/B measurement knob, see EXPERIMENTS SPerf)."""
     import os
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     names = mesh.axis_names if mesh is not None else ()
     ba = tuple(a for a in ("pod", "data") if a in names)
     if cfg.parallelism == "tp":
@@ -471,7 +472,7 @@ def moe_shard_map(p, x, cfg: ModelConfig):
     Weights enter gathered over their FSDP axes (in_specs below) — the same
     per-layer weight gather every dense layer pays under FSDP.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     ba = act_batch_axes(cfg)
     B, T, D = x.shape
     # drop trailing batch axes the (micro)batch doesn't divide (e.g. a
@@ -503,7 +504,7 @@ def moe_shard_map(p, x, cfg: ModelConfig):
     wspec = P("model", None, None) if ep else P(None, None, "model")
     wospec = P("model", None, None) if ep else P(None, "model", None)
     ba_spec = ba if len(ba) != 1 else ba[0]
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(ba_spec), P(), wspec, wspec, wospec),
@@ -521,7 +522,7 @@ def moe(p, x, cfg: ModelConfig):
     ``moe_shard_map`` (see there); the plain path below serves single-device
     smoke tests and is the semantic reference.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is not None and not mesh.empty and "model" in mesh.axis_names:
         return moe_shard_map(p, x, cfg)
     B, T, D = x.shape

@@ -196,24 +196,23 @@ def _admit_program():
     events and every candidate's start/switch instants, so it contains every
     point where combined demand can rise inside any candidate's window —
     extra in-window points only re-sample the step function and cannot change
-    the max.  A ``lax.scan`` threads the within-batch dependency: an admitted
-    candidate's demand (table-lookup of its own step function, live on
-    [start, release)) is added to the carry that later candidates probe.
+    the max.  The per-(candidate, probe) demand pieces come from
+    ``batch_engine.candidate_probe_parts``, shared with the cluster
+    scheduler's placement program so the two packers' boundary semantics
+    cannot drift apart.  A ``lax.scan`` threads the within-batch dependency:
+    an admitted candidate's demand (table-lookup of its own step function,
+    live on [start, release)) is added to the carry that later candidates
+    probe.
     """
     import jax
     import jax.numpy as jnp
 
+    from repro.sim.batch_engine import candidate_probe_parts
+
     def run(P, prof, starts, ends, rels, bnd, val, valext, sw, live, valid, budget):
-        k = bnd.shape[1]
-        offs = P[None, :, None] - starts[:, None, None]  # (C, Pp, 1)-broadcast offsets
-        idx = jnp.minimum(jnp.sum(bnd[:, None, :] < offs, axis=-1), k - 1)
-        A = jnp.take_along_axis(val, idx, axis=1)  # own demand alloc.at(P - start), (C, Pp)
-        M = (P[None, :] >= starts[:, None]) & (P[None, :] <= ends[:, None]) & jnp.isfinite(P)[None, :]
-        # Member contribution if admitted: the plan's own profile demand —
-        # value after the switches that fired by P, live on [start, release).
-        nst = jnp.sum(live[:, None, :] & (sw[:, None, :] <= P[None, :, None]), axis=-1)
-        inwin = (P[None, :] >= starts[:, None]) & (P[None, :] < rels[:, None])
-        D = jnp.where(inwin, jnp.take_along_axis(valext, nst, axis=1), 0.0)
+        A, M, D = candidate_probe_parts(
+            P, starts, ends, rels, bnd, val, valext, sw, live, inclusive_end=True
+        )
 
         def step(extra, row):
             a, d, m, ok = row

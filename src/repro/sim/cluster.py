@@ -11,33 +11,41 @@ Outputs per policy: makespan, wastage (reserved-minus-used GiB*s), retries —
 so the scheduler-level benefit of segment-wise reservations (vs static peak
 reservations) is measurable end to end, not just per task.
 
-Two engines share the placement logic (``_find_slot`` / ``NodeState``):
+Two engines share the node bookkeeping (``NodeState``, backed by the serving
+path's ``IncrementalDemandProfile``):
 
 * ``run_cluster`` — the sequential oracle: one ``predict``/score/``observe``
-  chain per task through the numpy predictors.
+  chain per task through the numpy predictors, placed by the scalar
+  ``_find_slot`` loop (one ``fits`` probe per node per wait step).
 * ``run_cluster_batched`` — every queued execution's predictions and full
   retry ladder (attempt -> allocation, failure index, wastage) precomputed
   for **all** policies in one pass of bucket-padded vmapped device programs
-  (``repro.sim.batch_engine.compute_cluster_ladders``); the host event loop
-  only does placement.  Predictions see exactly the executions the sequential
-  protocol would have observed (completed earlier executions of the same task
-  type), so per-task outcomes match the oracle run with
-  ``KSegmentsConfig(error_mode="progressive")`` — see tests/test_cluster_batch.py.
+  (``repro.sim.batch_engine.compute_cluster_ladders``), and placement itself
+  batched per wait epoch: one jitted ``searchsorted``-probe program decides
+  the whole (candidate x node) first-fit matrix for a window of attempt
+  rows, a ``lax.scan`` threading within-epoch sequencing
+  (``batch_engine.first_fit_epoch``), and blocked candidates waiting via one
+  vectorized probe over the completion heap.  Predictions see exactly the
+  executions the sequential protocol would have observed (completed earlier
+  executions of the same task type), so per-task outcomes match the oracle
+  run with ``KSegmentsConfig(error_mode="progressive")`` — see
+  tests/test_cluster_batch.py and tests/test_cluster_placement.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 
 import numpy as np
 
 from repro.core.allocation import (
+    IncrementalDemandProfile,
     StepAllocation,
     demand_exceeds,
-    pack_step_allocations,
+    demand_exceeds_many,
     score_attempt_np,
-    step_demand_profile,
 )
 from repro.core.ksegments import KSegmentsConfig
 from repro.core.predictor import AllocationMethod, make_method
@@ -49,86 +57,68 @@ class NodeState:
     capacity_mib: float
     # active reservations: (end_time, alloc, start_time)
     active: list[tuple[float, StepAllocation, float]] = dataclasses.field(default_factory=list)
-    # Packed array view of ``active`` maintained incrementally by add()/
-    # expire().  Mutate through those methods; direct external mutation
-    # (append, rebind, in-place element replacement) is detected via the
-    # row-identity key — a mutating row must coexist with the row it
-    # replaces, so the key change is deterministic — and triggers a full
-    # rebuild on the next fits().  The node's combined demand profile
-    # (_profile) derives from the packed view lazily.
-    _packed: tuple | None = dataclasses.field(default=None, repr=False, compare=False)
-    _prof: tuple | None = dataclasses.field(default=None, repr=False, compare=False)
-
-    def reserved_at(self, t: float) -> float:
-        """Total reserved MiB at time ``t`` (one profile probe — same source
-        of truth as fits())."""
-        times, cum = self._profile()
-        return float(cum[np.searchsorted(times, t, side="right")])
+    # The node's combined demand profile, maintained incrementally under
+    # add()/expire() by the serving path's IncrementalDemandProfile (O(E + k)
+    # per placement instead of a packed-view re-sort).  Direct external
+    # mutation of ``active`` (append, rebind, element replacement) is
+    # detected via the row-identity key — a mutating row must coexist with
+    # the row it replaces, so the key change is deterministic — and triggers
+    # a full profile rebuild on the next read.
+    _prof: IncrementalDemandProfile = dataclasses.field(
+        default_factory=IncrementalDemandProfile, init=False, repr=False, compare=False
+    )
+    _synced: tuple = dataclasses.field(default=(), init=False, repr=False, compare=False)
+    _seq: int = dataclasses.field(default=0, init=False, repr=False, compare=False)
 
     def _key(self) -> tuple[int, ...]:
         return tuple(map(id, self.active))
 
-    def _pack(self):
-        """(boundaries (R, kmax) inf-padded, values (R, kmax+1) hold-last,
-        starts (R,), ends (R,)) of the active reservations."""
-        if self._packed is None or self._packed[0] != self._key():
-            bnd, val = pack_step_allocations([a for _, a, _ in self.active])
-            starts = np.asarray([s for _, _, s in self.active])
-            ends = np.asarray([e for e, _, _ in self.active])
-            self._packed = (self._key(), bnd, val, starts, ends)
-        return self._packed[1:]
+    def _sync(self) -> IncrementalDemandProfile:
+        key = self._key()
+        if key != self._synced:
+            prof = IncrementalDemandProfile()
+            for end, alloc, start in self.active:
+                prof.add(self._seq, alloc.boundaries, alloc.values, start, end)
+                self._seq += 1
+            self._prof = prof
+            self._synced = key
+        return self._prof
 
-    def _profile(self):
+    def profile_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """The node's total reserved-demand step profile as (event times,
         cumulative demand): ``cum[searchsorted(times, t, "right")]`` is the
-        reservation sum at ``t`` (see ``core.allocation.step_demand_profile``;
-        a reservation end is its release time — exclusive)."""
-        key = self._key()
-        if self._prof is None or self._prof[0] != key:
-            bnd, val, starts, ends = self._pack()
-            self._prof = (key, *step_demand_profile(bnd, val, starts, ends))
-        return self._prof[1], self._prof[2]
+        reservation sum at ``t`` (a reservation end is its release time —
+        exclusive).  The same arrays back ``fits``, ``reserved_at`` and the
+        batched placement program's probe reads, so every consumer sees one
+        source of truth."""
+        return self._sync().arrays()
+
+    def reserved_at(self, t: float) -> float:
+        """Total reserved MiB at time ``t`` (one profile probe — same source
+        of truth as fits())."""
+        times, cum = self.profile_arrays()
+        return float(cum[np.searchsorted(times, t, side="right")])
 
     def add(self, end: float, alloc: StepAllocation, start: float) -> None:
-        """Reserve ``alloc`` over [start, end); keeps the packed view current
-        (one appended row instead of an O(R k) rebuild per placement)."""
-        bnd, val, starts, ends = self._pack()
+        """Reserve ``alloc`` over [start, end) — one O(E + k) event splice."""
+        prof = self._sync()
+        prof.add(self._seq, alloc.boundaries, alloc.values, start, end)
+        self._seq += 1
         self.active.append((end, alloc, start))
-        kk, kmax = alloc.k, bnd.shape[1]
-        if kk > kmax:
-            grow = kk - kmax
-            bnd = np.concatenate([bnd, np.full((len(starts), grow), np.inf)], axis=1)
-            val = np.concatenate([val, np.repeat(val[:, -1:], grow, axis=1)], axis=1)
-            kmax = kk
-        row_b = np.full(kmax, np.inf)
-        row_b[:kk] = alloc.boundaries
-        row_v = np.empty(kmax + 1)
-        row_v[:kk] = alloc.values
-        row_v[kk:] = alloc.values[-1]
-        self._packed = (
-            self._key(),
-            np.vstack([bnd, row_b]),
-            np.vstack([val, row_v]),
-            np.append(starts, start),
-            np.append(ends, end),
-        )
-        # The (id, len) key alone cannot be trusted across internal mutations:
-        # CPython reuses list ids, so a later list at a recycled address could
-        # resurrect a stale profile.  Drop it explicitly.
-        self._prof = None
+        self._synced = self._key()
 
     def expire(self, t: float) -> None:
-        """Drop reservations that ended at or before ``t`` (mask filter on the
-        packed view; no-op — and no cache invalidation — when none expired)."""
+        """Drop reservations that ended at or before ``t`` (released events
+        telescope to zero at probes >= t, so this only bounds event counts)."""
         if not self.active:
             return
-        bnd, val, starts, ends = self._pack()
-        keep = ends > t
-        if keep.all():
+        keep = [e > t for e, _, _ in self.active]
+        if all(keep):
             return
+        prof = self._sync()
+        prof.expire(t)
         self.active = [row for row, k_ in zip(self.active, keep) if k_]
-        self._packed = (self._key(), bnd[keep], val[keep], starts[keep], ends[keep])
-        self._prof = None  # see add(): ids recycle, never trust the stale key
+        self._synced = self._key()
 
     def fits(self, alloc: StepAllocation, start: float, duration: float) -> bool:
         """Can the candidate's reservation be placed over [start,
@@ -136,7 +126,7 @@ class NodeState:
         capacity?  One ``demand_exceeds`` probe pass against the node's
         cached cumulative profile — this is the scheduler's placement inner
         loop, and per-checkpoint scalar probes dominated whole cluster runs."""
-        times, cum = self._profile()
+        times, cum = self.profile_arrays()
         return not demand_exceeds(
             times, cum, alloc, start, start + duration, self.capacity_mib + 1e-6
         )
@@ -300,6 +290,228 @@ def run_cluster(
     )
 
 
+# Consecutive no-wait host placements before the congested scheduler hands
+# back to the device window (see _place_rows_batched): 1 thrashes on
+# isolated successes between waits, large values keep whole streams on the
+# slow scalar path; 2 measured best across corpus scales.
+_STREAK_RESUME = 2
+
+
+def _first_fit_now(profs, budget: float, alloc: StepAllocation, now: float, duration: float):
+    """Scalar first-fit at a fixed clock — the oracle's per-node ``fits``
+    pass against the nodes' cached cumulative profiles.  Returns the lowest
+    fitting node index or None."""
+    for ni, prof in enumerate(profs):
+        times, cum = prof.arrays()
+        if not demand_exceeds(times, cum, alloc, now, now + duration, budget):
+            return ni
+    return None
+
+
+def _wait_for_fit(
+    profs,
+    budget: float,
+    events: list[tuple[float, int]],
+    now: float,
+    alloc: StepAllocation,
+    duration: float,
+) -> tuple[int, float]:
+    """The blocked-candidate wait loop of the batched scheduler, mirroring
+    ``_find_slot``'s event-pop semantics: pop completion instants until some
+    node fits, return (node, time).  The profile is frozen while a candidate
+    waits (nothing commits until it places, and expiry never changes a probe
+    at t >= now), so instead of one ``fits`` pass per popped event the
+    sorted snapshot of the heap is probed chunk-wise with
+    ``demand_exceeds_many``, and exactly the events the sequential oracle
+    would have consumed are popped."""
+    while True:
+        if not events:
+            # unreachable for capped allocations (an empty node always fits),
+            # kept as the oracle's same last-resort clock step
+            now += 1.0
+            ni = _first_fit_now(profs, budget, alloc, now, duration)
+            if ni is not None:
+                return ni, now
+            continue
+        snap = sorted(events)
+        all_t = np.maximum(now, np.asarray([t for t, _ in snap]))
+        # chunked scan: a blocked candidate usually fits within the next few
+        # completions, so probe the snapshot a slice at a time instead of
+        # building the full (S, events) matrices up front
+        for c0 in range(0, len(all_t), 8):
+            cand_t = all_t[c0 : c0 + 8]
+            fit = np.stack(
+                [
+                    ~demand_exceeds_many(*prof.arrays(), alloc, cand_t, duration, budget)
+                    for prof in profs
+                ]
+            )  # (N, S)
+            any_t = fit.any(axis=0)
+            if any_t.any():
+                i = int(np.argmax(any_t))
+                for _ in range(c0 + i + 1):
+                    heapq.heappop(events)
+                return int(np.argmax(fit[:, i])), float(cand_t[i])
+        for _ in range(len(snap)):
+            heapq.heappop(events)
+        now = float(all_t[-1])
+
+
+def _policy_rows(ladders, queue, policy: str):
+    """Flatten one policy's retry ladders into placement rows (queue x
+    attempt order): (boundaries (R, k), values (R, k), run times (R,),
+    attempts per task (Q,), wastage per task (Q,)).
+
+    Works trace-block-wise straight off the ``TaskLadders`` tensors
+    (``_eligible_queue`` emits each trace's executions contiguously) — the
+    per-row quantities are ``AttemptLadder.run_time_s`` /
+    ``total_wastage_gib_s`` vectorized, including ``row()``'s convergence
+    check."""
+    bnds, vals, runs, counts_all, waste = [], [], [], [], []
+    Q = len(queue)
+    i0 = 0
+    while i0 < Q:
+        trace = queue[i0][0]
+        i1 = i0
+        while i1 < Q and queue[i1][0] is trace:
+            i1 += 1
+        execs = np.asarray([i for _, i in queue[i0:i1]])
+        tl = ladders[(trace.workflow, trace.name)]
+        mi = tl.methods.index(policy)
+        counts = tl.n_attempts[mi, execs]  # (q,)
+        fi = tl.failure_index[mi, execs]  # (q, A)
+        final_fi = np.take_along_axis(fi, (counts - 1)[:, None], axis=1)[:, 0]
+        if np.any(final_fi >= 0):
+            bad = int(execs[np.argmax(final_fi >= 0)])
+            tl.row(policy, bad)  # raises with the scalar path's diagnostics
+        durations = (
+            np.asarray([len(trace.executions[i].series) for i in execs]) * trace.interval_s
+        )
+        mask = np.arange(fi.shape[1])[None, :] < counts[:, None]
+        runs.append(np.where(fi < 0, durations[:, None], (fi + 1) * trace.interval_s)[mask])
+        vals.append(tl.values[mi, execs][mask])
+        k = tl.boundaries.shape[-1]
+        bnds.append(np.broadcast_to(tl.boundaries[mi, execs][:, None, :], (*mask.shape, k))[mask])
+        counts_all.append(counts)
+        waste.append(np.sum(tl.wastage_gib_s[mi, execs] * mask, axis=1))
+        i0 = i1
+    return (
+        np.concatenate(bnds),
+        np.concatenate(vals),
+        np.concatenate(runs).astype(np.float64),
+        np.concatenate(counts_all),
+        np.concatenate(waste),
+    )
+
+
+def _place_rows_batched(
+    bnd_rows: np.ndarray,
+    val_rows: np.ndarray,
+    run_rows: np.ndarray,
+    n_nodes: int,
+    node_mib: float,
+    window: int,
+    stats: dict | None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Place all of one policy's attempt rows with the wait-epoch device
+    program.  Returns per-row (node, start, end) arrays with the sequential
+    oracle's exact placement semantics.
+
+    Hybrid dispatch, the same shape as ``BatchedAdmissionController``'s: in
+    the *streaming* regime (placements succeeding at the current clock) one
+    device program decides a whole window of rows per dispatch
+    (``first_fit_epoch``); when a row blocks, the scheduler drops into the
+    *congested* regime — the oracle's own probe expressions host-side (one
+    scalar first-fit per row, the chunked ``_wait_for_fit`` event scan while
+    nothing fits), where a device round-trip per single placement would cost
+    more than it decides — and returns to the device window as soon as a row
+    places without waiting.  Decisions are identical in both regimes (the
+    parity suite covers corpora that exercise both)."""
+    from jax.experimental import enable_x64  # deferred: keeps the oracle jax-free
+
+    from repro.sim.batch_engine import first_fit_epoch
+
+    R = len(run_rows)
+    profs = [IncrementalDemandProfile() for _ in range(n_nodes)]
+    events: list[tuple[float, int]] = []
+    budget = node_mib + 1e-6  # NodeState.fits budget
+    row_node = np.empty(R, dtype=np.int64)
+    row_start = np.empty(R, dtype=np.float64)
+    row_end = np.empty(R, dtype=np.float64)
+    owner = 0
+    now = 0.0
+    r = 0
+    congested = False
+    streak = 0  # consecutive no-wait host placements while congested
+    with enable_x64():  # one context across all epoch dispatches
+        while r < R:
+            for prof in profs:
+                prof.expire(now)
+            if congested:
+                # host regime: place row r the oracle way, wait when needed
+                alloc = StepAllocation(bnd_rows[r], val_rows[r])
+                dur = float(run_rows[r])
+                ni = _first_fit_now(profs, budget, alloc, now, dur)
+                if ni is None:
+                    streak = 0
+                    ni, now = _wait_for_fit(profs, budget, events, now, alloc, dur)
+                    if stats is not None:
+                        stats["waits"] += 1
+                else:
+                    # only a sustained run of no-wait placements is worth a
+                    # device round-trip; isolated successes between waits
+                    # stay on the host path
+                    streak += 1
+                    congested = streak < _STREAK_RESUME
+                    if not congested:
+                        streak = 0
+                end = now + dur
+                profs[ni].add(owner, bnd_rows[r], val_rows[r], now, end)
+                owner += 1
+                heapq.heappush(events, (end, ni))
+                row_node[r], row_start[r], row_end[r] = ni, now, end
+                r += 1
+                continue
+            w = min(window, R - r)
+            t0 = time.perf_counter()
+            placed, nidx = first_fit_epoch(
+                now,
+                bnd_rows[r : r + w],
+                val_rows[r : r + w],
+                run_rows[r : r + w],
+                [prof.arrays() for prof in profs],
+                budget,
+                window,
+            )
+            if stats is not None:
+                stats["program_calls"] += 1
+                stats["program_wall_s"] += time.perf_counter() - t0
+            npl = w if placed.all() else int(np.argmin(placed))
+            if npl:
+                ends = now + run_rows[r : r + npl]
+                # committing per node in row order splices time-tied events in
+                # exactly the order the oracle's one-at-a-time add() would
+                for n in np.unique(nidx[:npl]):
+                    m = np.flatnonzero(nidx[:npl] == n)
+                    profs[n].add_many(
+                        range(owner, owner + len(m)),
+                        bnd_rows[r + m],
+                        val_rows[r + m],
+                        np.full(len(m), now),
+                        ends[m],
+                    )
+                    owner += len(m)
+                for j in range(npl):
+                    heapq.heappush(events, (float(ends[j]), int(nidx[j])))
+                row_node[r : r + npl] = nidx[:npl]
+                row_start[r : r + npl] = now
+                row_end[r : r + npl] = ends
+                r += npl
+            if r < R and npl < w:
+                congested = True  # the program blocked on row r
+    return row_node, row_start, row_end
+
+
 def run_cluster_batched(
     workflows: list[WorkflowTrace],
     policies: tuple[str, ...],
@@ -310,15 +522,27 @@ def run_cluster_batched(
     min_executions: int = 10,
     ksegments_config: KSegmentsConfig | None = None,
     max_attempts: int = 32,
+    placement_window: int = 32,
+    placement_stats: dict | None = None,
 ) -> dict[str, ClusterResult]:
     """Evaluate every policy through the cluster in one device pass.
 
     All queued executions' predictions and retry ladders — for **all**
     policies at once — come from one shared tensor of (attempt -> allocation,
     failure index, wastage) rows computed by bucket-padded vmapped scans
-    (``compute_cluster_ladders``); the remaining host loop only places those
-    rows against ``NodeState`` step profiles.  Returns {policy: ClusterResult}
-    with the same per-task records as the sequential oracle.
+    (``compute_cluster_ladders``, truncated to the executions the queue can
+    reach); placement itself is batched too: at each scheduling epoch one
+    jitted program (``batch_engine.first_fit_epoch``) decides the whole
+    (candidate x node) first-fit matrix for a window of attempt rows, with a
+    ``lax.scan`` making earlier placements' demand visible to later
+    candidates, and a blocked candidate waits via one vectorized probe of
+    the completion heap (``_wait_for_fit``).  Returns {policy: ClusterResult}
+    with the same per-task records as the sequential oracle
+    (tests/test_cluster_placement.py asserts exact (node, start, end) parity
+    per attempt).
+
+    ``placement_stats``, when passed, accumulates
+    ``{"program_calls", "program_wall_s", "waits", "rows"}`` for the bench.
 
     k-Segments policies run with progressive error offsets (the device
     engine's bounded-carry mode); ``ksegments_config.error_mode`` other than
@@ -331,39 +555,57 @@ def run_cluster_batched(
         raise ValueError("run_cluster_batched supports only progressive error offsets")
     policies = tuple(policies)
     queue, traces = _eligible_queue(workflows, train_frac, max_tasks_per_type, min_executions)
-    ladders = compute_cluster_ladders([t for t, _ in traces], policies, node_mib, kcfg, max_attempts)
+    # The ladder scan is forward-only (an execution's prediction sees only
+    # earlier executions), so executions past the last one the queue can
+    # reach are dead weight — truncating them shrinks the biggest buckets
+    # without changing any consumed row.
+    trunc = [
+        dataclasses.replace(t, executions=t.executions[: n_train + max_tasks_per_type])
+        for t, n_train in traces
+    ]
+    ladders = compute_cluster_ladders(trunc, policies, node_mib, kcfg, max_attempts)
 
-    results: dict[str, ClusterResult] = {}
-    for policy in policies:
-        nodes = [NodeState(node_mib) for _ in range(n_nodes)]
-        events: list[tuple[float, int]] = []
-        now = 0.0
-        total_waste = 0.0
-        total_retries = 0
-        makespan = 0.0
-        records: list[TaskRecord] = []
-        for trace, i in queue:
-            lad = ladders[(trace.workflow, trace.name)].row(policy, i)
-            duration = len(trace.executions[i].series) * trace.interval_s
-            placements: list[tuple[int, float, float]] = []
-            for a in range(lad.n_attempts):
-                alloc = lad.alloc(a)
-                placed, now = _find_slot(nodes, events, now, alloc, duration)
-                end = now + lad.run_time_s(a, duration, trace.interval_s)
-                nodes[placed].add(end, alloc, now)
-                heapq.heappush(events, (end, placed))
-                placements.append((placed, now, end))
-                makespan = max(makespan, end)
-            task_waste = lad.total_wastage_gib_s
-            total_waste += task_waste
-            total_retries += lad.n_attempts - 1
-            records.append(TaskRecord(trace.workflow, trace.name, i, lad.n_attempts, placements, task_waste))
-        results[policy] = ClusterResult(
+    def _run_policy(policy: str) -> tuple[str, ClusterResult, dict]:
+        stats = {"program_calls": 0, "program_wall_s": 0.0, "waits": 0, "rows": 0}
+        bnd_rows, val_rows, run_rows, counts, waste = _policy_rows(ladders, queue, policy)
+        row_node, row_start, row_end = _place_rows_batched(
+            bnd_rows, val_rows, run_rows, n_nodes, node_mib, placement_window, stats
+        )
+        stats["rows"] = len(run_rows)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        records = [
+            TaskRecord(
+                trace.workflow,
+                trace.name,
+                i,
+                int(counts[q]),
+                [
+                    (int(row_node[j]), float(row_start[j]), float(row_end[j]))
+                    for j in range(offsets[q], offsets[q + 1])
+                ],
+                float(waste[q]),
+            )
+            for q, (trace, i) in enumerate(queue)
+        ]
+        result = ClusterResult(
             policy=policy,
-            makespan_s=float(makespan),
-            wastage_gib_s=float(total_waste),
-            retries=int(total_retries),
+            makespan_s=float(row_end.max()) if len(row_end) else 0.0,
+            wastage_gib_s=float(waste.sum()),
+            retries=int((counts - 1).sum()),
             tasks_run=len(queue),
             records=records,
         )
+        return policy, result, stats
+
+    # The policies' schedulers are independent simulations but share the
+    # process's device stream: running them on threads serializes on the jit
+    # dispatch lock while stalling each other's host bookkeeping (measured
+    # ~2x slower), so they run sequentially.
+    outs = [_run_policy(p) for p in policies]
+    results: dict[str, ClusterResult] = {}
+    for policy, result, stats in outs:
+        results[policy] = result
+        if placement_stats is not None:
+            for k_, v in stats.items():
+                placement_stats[k_] = placement_stats.get(k_, 0) + v
     return results

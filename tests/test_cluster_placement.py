@@ -1,0 +1,310 @@
+"""Batched wait-epoch placement vs the scalar oracle, and the node-profile
+boundary semantics under a brute-force oracle.
+
+Three layers:
+
+* **Engine parity given rows** — the placement engine itself
+  (``_place_rows_batched``: windowed device program + congested host regime
+  + vectorized wait scan) must produce the exact (node, start, end) the
+  scalar ``_find_slot`` loop produces for the *same* attempt rows, on any
+  corpus.  This is the invariant the device program owns.
+* **End-to-end placement parity** — randomized corpora replayed through
+  ``run_cluster_batched`` and the sequential ``run_cluster`` oracle must
+  produce the exact same (node, start, end) per attempt, across all four
+  bench policies and cluster sizes that exercise both regimes.  (End-to-end
+  exactness additionally needs the float32 device *predictions* to land on
+  the same side of every capacity comparison as the float64 numpy
+  predictors — corpora are chosen away from such ulp boundaries, same as
+  tests/test_cluster_batch.py; the engine-parity layer above is
+  boundary-free because both sides consume identical rows.)
+* **Boundary oracle** — ``NodeState.fits`` / ``reserved_at`` /
+  ``demand_exceeds_many`` probed against a naive Eq. (1) evaluator at every
+  event instant and its one-ulp neighbours (mirroring
+  tests/test_demand_oracle.py), including reservations starting *exactly* at
+  another's release time — the case where an off-by-one-ulp disagreement
+  between the profile's release events and the probe sides would show up.
+
+Each property runs as a seeded loop plus a hypothesis variant (skipped
+cleanly by the conftest shim when hypothesis is absent).
+"""
+
+import dataclasses
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocation import StepAllocation, demand_exceeds, demand_exceeds_many
+from repro.core.ksegments import KSegmentsConfig
+from repro.sim.cluster import (
+    NodeState,
+    _eligible_queue,
+    _find_slot,
+    _place_rows_batched,
+    _policy_rows,
+    run_cluster,
+    run_cluster_batched,
+)
+from repro.sim.traces import generate_workflow
+
+POLICIES = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
+NODE_MIB = 128 * 1024.0
+
+
+# ---------------------------------------------------------------------------
+# Engine parity given rows: device/hybrid placement == scalar _find_slot
+# ---------------------------------------------------------------------------
+
+
+def _scalar_place_rows(bnd_rows, val_rows, run_rows, n_nodes):
+    """Reference placement of flat attempt rows via the oracle's scalar
+    ``_find_slot`` + ``NodeState`` loop."""
+    nodes = [NodeState(NODE_MIB) for _ in range(n_nodes)]
+    events: list = []
+    now = 0.0
+    out = []
+    for r in range(len(run_rows)):
+        alloc = StepAllocation(bnd_rows[r], val_rows[r])
+        placed, now = _find_slot(nodes, events, now, alloc, float(run_rows[r]))
+        end = now + float(run_rows[r])
+        nodes[placed].add(end, alloc, now)
+        heapq.heappush(events, (end, placed))
+        out.append((placed, now, end))
+    return out
+
+
+@pytest.mark.parametrize(
+    "seed,name,n_nodes,window",
+    [
+        (11, "sarek", 3, 32),  # the seed whose f32 predictions sit on a capacity ulp
+        (3, "eager", 2, 32),
+        (5, "eager", 5, 8),  # tiny window: many epoch boundaries
+        (41, "sarek", 4, 32),
+    ],
+)
+def test_engine_parity_given_rows(seed, name, n_nodes, window):
+    """Same ladder rows in, same (node, start, end) out — regardless of how
+    the rows were predicted."""
+    from repro.sim.batch_engine import compute_cluster_ladders
+
+    wfs = [generate_workflow(name, seed=seed, scale=0.06)]
+    queue, traces = _eligible_queue(wfs, 0.5, 10, 8)
+    trunc = [dataclasses.replace(t, executions=t.executions[: nt + 10]) for t, nt in traces]
+    ladders = compute_cluster_ladders(trunc, POLICIES, NODE_MIB, KSegmentsConfig(error_mode="progressive"))
+    for policy in POLICIES:
+        bnd_rows, val_rows, run_rows, _counts, _waste = _policy_rows(ladders, queue, policy)
+        ref = _scalar_place_rows(bnd_rows, val_rows, run_rows, n_nodes)
+        rn, rs, re = _place_rows_batched(bnd_rows, val_rows, run_rows, n_nodes, NODE_MIB, window, None)
+        got = [(int(rn[r]), float(rs[r]), float(re[r])) for r in range(len(run_rows))]
+        assert got == ref, policy
+
+
+# ---------------------------------------------------------------------------
+# Placement parity: batched epoch program vs the sequential oracle
+# ---------------------------------------------------------------------------
+
+
+def _assert_cluster_parity(wfs, policies, **kw):
+    cfg = KSegmentsConfig(error_mode="progressive")
+    batched = run_cluster_batched(wfs, policies, **kw)
+    for policy in policies:
+        seq = run_cluster(wfs, policy, ksegments_config=cfg, **kw)
+        bat = batched[policy]
+        assert seq.tasks_run == bat.tasks_run > 0
+        assert seq.retries == bat.retries
+        assert seq.makespan_s == bat.makespan_s
+        for rs, rb in zip(seq.records, bat.records):
+            assert (rs.workflow, rs.task, rs.exec_index) == (rb.workflow, rb.task, rb.exec_index)
+            assert rs.attempts == rb.attempts
+            # exact placement decisions: same nodes at the same instants
+            assert rs.placements == rb.placements
+            np.testing.assert_allclose(rs.wastage_gib_s, rb.wastage_gib_s, rtol=1e-3, atol=1e-6)
+        np.testing.assert_allclose(seq.wastage_gib_s, bat.wastage_gib_s, rtol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "seed,name,n_nodes,scale",
+    [
+        (3, "eager", 2, 0.12),  # tight cluster: the congested host regime dominates
+        (5, "eager", 5, 0.12),  # loose cluster: long streaming windows on device
+        (13, "sarek", 3, 0.06),
+        (23, "eager", 4, 0.1),
+    ],
+)
+def test_randomized_corpus_placement_parity(seed, name, n_nodes, scale):
+    wfs = [generate_workflow(name, seed=seed, scale=scale)]
+    _assert_cluster_parity(
+        wfs, POLICIES, n_nodes=n_nodes, max_tasks_per_type=12, min_executions=8, train_frac=0.5
+    )
+
+
+def test_placement_parity_across_fracs():
+    wfs = [generate_workflow("eager", seed=9, scale=0.12)]
+    for frac in (0.25, 0.75):
+        _assert_cluster_parity(
+            wfs,
+            ("default", "ksegments-selective"),
+            n_nodes=3,
+            max_tasks_per_type=10,
+            min_executions=8,
+            train_frac=frac,
+        )
+
+
+@settings(deadline=None, max_examples=5)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+def test_property_placement_parity(seed, n_nodes):
+    wfs = [generate_workflow("eager", seed=seed, scale=0.05)]
+    _assert_cluster_parity(
+        wfs,
+        ("default", "ksegments-selective"),
+        n_nodes=n_nodes,
+        max_tasks_per_type=6,
+        min_executions=6,
+        train_frac=0.5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Brute-force boundary oracle for the node profile
+# ---------------------------------------------------------------------------
+
+
+def _oracle_value(alloc: StepAllocation, start: float, t: float) -> float:
+    """Naive Eq. (1): step s+1 applies from the first representable instant
+    after ``start + b_s`` (right-open steps)."""
+    idx = 0
+    for b in alloc.boundaries[:-1]:
+        if t >= np.nextafter(start + b, np.inf):
+            idx += 1
+    return float(alloc.values[idx])
+
+
+def _oracle_total(rows, t: float) -> float:
+    """Naive reserved total: a reservation holds on [start, end) — its end
+    is the release instant, exclusive (unlike a serving plan's Eq. 1 domain,
+    which holds through r_e)."""
+    return sum(_oracle_value(a, s, t) for e, a, s in rows if s <= t < e)
+
+
+def _rand_alloc(rng, exact_ties: bool) -> StepAllocation:
+    k = int(rng.integers(1, 5))
+    b = np.sort(rng.uniform(0.5, 40.0, k))
+    if exact_ties:  # values that can sum exactly to the capacity
+        v = np.maximum.accumulate(rng.choice([100.0, 200.0, 250.0, 500.0], k))
+    else:
+        v = np.maximum.accumulate(rng.uniform(10.0, 500.0, k))
+    return StepAllocation(b, v)
+
+
+def _build_node(rng, exact_ties: bool):
+    """A NodeState under add/expire churn; half the reservations start
+    exactly at the previous one's release time."""
+    nd = NodeState(capacity_mib=1000.0)
+    rows = []
+    for _ in range(int(rng.integers(2, 8))):
+        a = _rand_alloc(rng, exact_ties)
+        start = rows[-1][0] if rows and rng.random() < 0.5 else float(rng.uniform(0.0, 60.0))
+        end = start + float(rng.uniform(2.0, 50.0))
+        nd.add(end, a, start)
+        rows.append((end, a, start))
+        if rng.random() < 0.3:
+            cut = float(rng.uniform(0.0, 80.0))
+            nd.expire(cut)
+            rows = [r for r in rows if r[0] > cut]
+    return nd, rows
+
+
+def _probe_grid(rows, rng):
+    """Every event instant, one ulp before, one ulp after, plus random times."""
+    ev = [0.0]
+    for end, a, start in rows:
+        ev += [start, end]
+        ev += list(np.nextafter(start + a.boundaries, np.inf))
+    ev = np.asarray(ev)
+    return np.concatenate(
+        [ev, np.nextafter(ev, -np.inf), np.nextafter(ev, np.inf), rng.uniform(0.0, 120.0, 48)]
+    )
+
+
+def _check_node_matches_oracle(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    nd, rows = _build_node(rng, exact_ties=seed % 2 == 0)
+    grid = _probe_grid(rows, rng)
+    for t in grid:
+        got = nd.reserved_at(float(t))
+        want = _oracle_total(rows, float(t))
+        assert np.isclose(got, want, rtol=1e-9, atol=1e-6), (float(t), got, want)
+    for _ in range(6):
+        cand = _rand_alloc(rng, seed % 2 == 0)
+        # placement windows that start exactly at a release instant are the
+        # regression case: the released row must not count at the start probe
+        start = float(rng.choice([r[0] for r in rows])) if rows and rng.random() < 0.6 else float(rng.uniform(0.0, 70.0))
+        dur = float(rng.uniform(1.0, 45.0))
+        end = start + dur
+        pts = np.concatenate([[start], np.nextafter(start + cand.boundaries, np.inf), grid])
+        pts = pts[(pts >= start) & (pts < end)]
+        peak = max(_oracle_total(rows, float(t)) + _oracle_value(cand, start, float(t)) for t in pts)
+        want = peak <= 1000.0 + 1e-6  # fits' budget expression
+        assert nd.fits(cand, start, dur) == want, (start, dur, peak)
+        # the vectorized multi-start probe must agree with the scalar one
+        times, cum = nd.profile_arrays()
+        starts = np.asarray([start, start + 0.5, np.nextafter(start, np.inf)])
+        many = demand_exceeds_many(times, cum, cand, starts, dur, 1000.0 + 1e-6)
+        for s, got in zip(starts, many):
+            scalar = demand_exceeds(times, cum, cand, float(s), float(s) + dur, 1000.0 + 1e-6)
+            assert bool(got) == scalar, (float(s), dur)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7, 19, 101])
+def test_node_profile_matches_oracle(seed):
+    _check_node_matches_oracle(seed)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 2**31 - 1))
+def test_property_node_profile_matches_oracle(seed):
+    _check_node_matches_oracle(seed)
+
+
+def test_reservation_at_anothers_release_boundary_exact():
+    """Pinned semantics at the exact-collision instant: at A's release time
+    B (starting right there) is the only live reservation; one ulp earlier A
+    is the only one; and a candidate window starting at the collision packs
+    against B alone."""
+    nd = NodeState(capacity_mib=1000.0)
+    a = StepAllocation(np.asarray([10.0]), np.asarray([700.0]))
+    b = StepAllocation(np.asarray([10.0]), np.asarray([600.0]))
+    nd.add(10.0, a, 0.0)
+    nd.add(20.0, b, 10.0)
+    assert nd.reserved_at(np.nextafter(10.0, -np.inf)) == 700.0
+    assert nd.reserved_at(10.0) == 600.0  # A released, B live
+    # 400 fits alongside B (600 + 400 <= 1000) but not alongside A + B
+    cand = StepAllocation(np.asarray([5.0]), np.asarray([400.0]))
+    assert nd.fits(cand, 10.0, 5.0)
+    assert not nd.fits(cand, np.nextafter(10.0, -np.inf), 5.0)
+
+
+def test_profile_add_many_matches_sequential_adds():
+    """One vectorized spliced commit must leave the profile arrays
+    bit-identical to one-at-a-time adds — this is what keeps the batched
+    scheduler's per-epoch commits (``profs[n].add_many`` in
+    ``_place_rows_batched``) on the same profile as the oracle's sequential
+    ``NodeState.add`` commits."""
+    from repro.core.allocation import IncrementalDemandProfile
+
+    rng = np.random.default_rng(5)
+    one, many = IncrementalDemandProfile(), IncrementalDemandProfile()
+    k = 3
+    bnd = np.sort(rng.uniform(0.5, 30.0, (6, k)), axis=1)
+    val = np.maximum.accumulate(rng.uniform(10.0, 400.0, (6, k)), axis=1)
+    ends = rng.uniform(40.0, 80.0, 6)
+    for i in range(6):
+        one.add(i, bnd[i], val[i], 7.0, float(ends[i]))
+    many.add_many(range(6), bnd, val, np.full(6, 7.0), ends)
+    t1, c1 = one.arrays()
+    t2, c2 = many.arrays()
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(c1, c2)

@@ -1,0 +1,66 @@
+"""Persistent-compilation-cache smoke test (subprocesses, since the cache
+must be configured before the backend compiles anything).
+
+``REPRO_COMPILE_CACHE`` points jax's persistent cache at a directory
+(``repro.compat.enable_compile_cache``, hooked by ``repro.sim.batch_engine``
+on import); a first process populates it, a second process must get actual
+cache *hits* — asserted via jax's monitoring events, not just file reuse —
+so a warm process deserializes executables instead of recompiling (the
+batched engines' ~20 s CPU cold start)."""
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CHILD = r"""
+import os, sys, json
+sys.path.insert(0, sys.argv[1])
+import repro.sim.batch_engine  # calls compat.enable_compile_cache() on import
+import jax, jax.numpy as jnp
+from jax._src import monitoring
+
+hits = []
+monitoring.register_event_listener(
+    lambda name, **kw: hits.append(name) if "compilation_cache/cache_hit" in name else None
+)
+f = jax.jit(lambda x: jnp.cumsum(jnp.sin(x)) * 2.0)
+f(jnp.ones((128,))).block_until_ready()
+print(json.dumps({"hits": len(hits)}))
+"""
+
+
+def _run(cache_dir: str) -> dict:
+    env = dict(os.environ, REPRO_COMPILE_CACHE=cache_dir)
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD, SRC], capture_output=True, text=True, timeout=300, env=env
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_cache_populates_and_hits(tmp_path):
+    cache = str(tmp_path / "xla_cache")
+    first = _run(cache)
+    entries = [f for f in os.listdir(cache) if f.endswith("-cache")]
+    assert entries, "first process must write executables into the cache dir"
+    assert first["hits"] == 0  # nothing to hit on a cold cache
+    second = _run(cache)
+    assert second["hits"] >= 1, "second process must hit the persistent cache"
+
+
+def test_cache_disabled_without_env(tmp_path):
+    env = dict(os.environ)
+    env.pop("REPRO_COMPILE_CACHE", None)
+    probe = (
+        "import sys; sys.path.insert(0, sys.argv[1]);"
+        "from repro.compat import enable_compile_cache;"
+        "print(enable_compile_cache())"
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", probe, SRC], capture_output=True, text=True, timeout=120, env=env
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert res.stdout.strip().splitlines()[-1] == "None"
