@@ -14,9 +14,14 @@ figure's headline quantity).
           decision-throughput microbench; always writes BENCH_serve.json
           (path override via REPRO_BENCH_SERVE_JSON)
   cluster — scheduler-level dynamic reservations vs static policies, on both
-            engines; always writes BENCH_cluster.json (policy, engine,
-            makespan, wastage, retries, cold/warm wall seconds; path override
-            via REPRO_BENCH_CLUSTER_JSON)
+            engines, in two variants (standard 16-node + congested
+            high-density 32-node full-policy sweep; --congested runs only
+            the latter); always writes BENCH_cluster.json (per-variant
+            policy/engine rows, cold/warm walls, placement counters incl.
+            waits resolved in-program vs host; path override via
+            REPRO_BENCH_CLUSTER_JSON).  --min-speedup X fails the run when
+            a variant's warm speedup drops below X (CI canary; also checked
+            by serve's microbench)
   roofline — aggregated dry-run roofline table (reads results/dryrun/)
 
 Run all:    PYTHONPATH=src python -m benchmarks.run
@@ -67,6 +72,16 @@ METHODS = ("default", "witt-lr", "ppm", "ppm-improved", "ksegments-selective", "
 FRACS = (0.25, 0.5, 0.75)
 
 _JSON_ROWS: list[dict] = []
+_FAILURES: list[str] = []
+# --min-speedup X: fail the run (exit 1) when a jitted path's warm speedup
+# lands below X — the CI perf canary for the cluster and serve benches.
+MIN_SPEEDUP: float | None = None
+CONGESTED_ONLY = False
+
+
+def _fail(msg: str) -> None:
+    print(f"# FAIL: {msg}", file=sys.stderr)
+    _FAILURES.append(msg)
 
 
 def _row(name: str, us: float, derived: str, engine: str = "-") -> None:
@@ -467,31 +482,17 @@ def bench_serve() -> None:
     with open(SERVE_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote serving rows to {SERVE_JSON}", file=sys.stderr)
+    if MIN_SPEEDUP is not None and speedup < MIN_SPEEDUP:
+        _fail(f"serve/microbench: warm speedup {speedup:.2f} < --min-speedup {MIN_SPEEDUP}")
 
 
-def bench_cluster() -> None:
-    """Beyond-paper: cluster-level scheduling with dynamic reservations
-    (the paper's Sec. IV-E 'resource managers must support adjustments').
-
-    Times BOTH engines on the identical multi-policy workload (the full
-    sarek + eager corpus, ``run_cluster``'s own ``max_tasks_per_type``
-    scaled by ``REPRO_BENCH_SCALE``) — the sequential per-task predictor
-    loop (progressive offsets, so the engines are comparable cell by cell)
-    and the batched device scheduler, which computes every policy's retry
-    ladders in one shared pass and places them with the wait-epoch device
-    program — and always writes machine-readable rows (policy, engine,
-    makespan, wastage, retries, cold/warm wall seconds, placement-program
-    counters) to ``BENCH_cluster.json`` (path override:
-    ``REPRO_BENCH_CLUSTER_JSON``)."""
+def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
+    """Run one cluster workload on both engines; returns the JSON payload
+    fragment and prints the CSV rows."""
     from repro.core.ksegments import KSegmentsConfig
     from repro.sim.cluster import run_cluster, run_cluster_batched
 
     wfs = _suite()
-    policies = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
-    # 16 nodes: the production-shaped cluster the device placement targets —
-    # the program probes the whole (candidate x node) matrix per dispatch
-    # while the scalar oracle pays one fits probe per node per wait step
-    kw = dict(n_nodes=16, max_tasks_per_type=max(int(120 * SCALE), 8), train_frac=0.5)
     cfg = KSegmentsConfig(error_mode="progressive")
 
     t0 = time.time()
@@ -501,6 +502,7 @@ def bench_cluster() -> None:
     # by 2x; the minimum is the standard steady-state estimator)
     warm = float("inf")
     place_stats: dict = {}
+    res_b: dict = {}
     for _ in range(2):
         stats_i: dict = {}
         t0 = time.time()
@@ -517,15 +519,15 @@ def bench_cluster() -> None:
     wall_py = time.time() - t0
 
     n = sum(r.tasks_run for r in res_b.values())
-    _row("cluster/python_engine", wall_py * 1e6 / max(n, 1), f"wall_s={wall_py:.2f}", engine="python")
+    _row(f"cluster/{name}/python_engine", wall_py * 1e6 / max(n, 1), f"wall_s={wall_py:.2f}", engine="python")
     _row(
-        "cluster/batch_engine_cold",
+        f"cluster/{name}/batch_engine_cold",
         cold * 1e6 / max(n, 1),
         f"wall_s={cold:.2f} (includes jit compile)",
         engine="batch",
     )
     _row(
-        "cluster/batch_engine",
+        f"cluster/{name}/batch_engine",
         warm * 1e6 / max(n, 1),
         f"wall_s={warm:.2f} speedup={wall_py / warm:.1f}x",
         engine="batch",
@@ -533,7 +535,7 @@ def bench_cluster() -> None:
     rows = []
     for p in policies:
         _row(
-            f"cluster/{p}",
+            f"cluster/{name}/{p}",
             py_wall[p] * 1e6 / max(res_py[p].tasks_run, 1),
             f"wastage_gib_s={res_py[p].wastage_gib_s:.1f} makespan_s={res_py[p].makespan_s:.0f} retries={res_py[p].retries}",
             engine="python",
@@ -553,12 +555,20 @@ def bench_cluster() -> None:
                 # (see batch_cold_wall_s / batch_warm_wall_s in the header).
                 row["wall_s"] = round(py_wall[p], 4)
             rows.append(row)
-    payload = {
-        "scale": SCALE,
-        "seed": SEED,
-        "train_frac": kw["train_frac"],
+    _row(
+        f"cluster/{name}/placement_program",
+        place_stats.get("program_wall_s", 0.0) * 1e6 / max(place_stats.get("program_calls", 1), 1),
+        f"calls={place_stats.get('program_calls', 0)} "
+        f"waits_program={place_stats.get('waits_program', 0)} "
+        f"waits_host={place_stats.get('waits_host', 0)} "
+        f"rows={place_stats.get('rows', 0)}",
+        engine="batch",
+    )
+    return {
         "n_nodes": kw["n_nodes"],
         "max_tasks_per_type": kw["max_tasks_per_type"],
+        "train_frac": kw["train_frac"],
+        "policies": list(policies),
         "python_wall_s": round(wall_py, 4),
         "batch_cold_wall_s": round(cold, 4),
         "batch_warm_wall_s": round(warm, 4),
@@ -567,20 +577,69 @@ def bench_cluster() -> None:
             "rows": place_stats.get("rows", 0),
             "program_calls": place_stats.get("program_calls", 0),
             "program_wall_s": round(place_stats.get("program_wall_s", 0.0), 4),
-            "waits": place_stats.get("waits", 0),
+            # waits resolved inside the device epoch program vs host-side
+            # last-resort clock walks (must be 0: the acceptance invariant
+            # of the timeline subsystem)
+            "waits_program": place_stats.get("waits_program", 0),
+            "waits_host": place_stats.get("waits_host", 0),
         },
         "rows": rows,
     }
+
+
+def bench_cluster() -> None:
+    """Beyond-paper: cluster-level scheduling with dynamic reservations
+    (the paper's Sec. IV-E 'resource managers must support adjustments').
+
+    Times BOTH engines on identical multi-policy workloads (the full sarek +
+    eager corpus, ``run_cluster``'s own ``max_tasks_per_type`` scaled by
+    ``REPRO_BENCH_SCALE``) — the sequential per-task predictor loop
+    (progressive offsets, so the engines are comparable cell by cell) vs the
+    batched device scheduler (one shared ladder pass for all policies +
+    device-timeline placement, waits resolved in-program).  Two variants:
+
+    * ``standard`` — 16 nodes, 4 bench policies, light congestion.
+    * ``congested`` — high task density per node (the whole corpus, every
+      engine policy, 2x nodes so the oracle's per-wait first-fit scans get
+      long): the regime the in-program wait path exists for.
+
+    ``--congested`` runs only that variant; ``--min-speedup X`` exits
+    non-zero when any variant's warm speedup lands below X (the CI canary).
+    Always writes machine-readable rows to ``BENCH_cluster.json``
+    (path override: ``REPRO_BENCH_CLUSTER_JSON``)."""
+    from repro.sim.jax_sim import ENGINE_METHODS
+
+    variants: dict[str, dict] = {}
+    mtpt = max(int(120 * SCALE), 8)
+    if not CONGESTED_ONLY:
+        # 16 nodes: the production-shaped cluster the device placement
+        # targets — the program probes the whole (candidate x node) matrix
+        # per dispatch while the scalar oracle pays one fits probe per node
+        # per wait step
+        variants["standard"] = _cluster_variant(
+            "standard",
+            ("default", "witt-lr", "ppm-improved", "ksegments-selective"),
+            dict(n_nodes=16, max_tasks_per_type=mtpt, train_frac=0.5),
+        )
+    # congested: the full corpus under EVERY engine policy on 32 nodes —
+    # ~30 queued tasks per node keep the cluster saturated, so blocked rows
+    # wait on future completions (resolved in-program by the epoch device
+    # program) while the oracle pays per-wait first-fit scans across all
+    # nodes; the shared ladder pass amortizes the 7-policy sweep.
+    variants["congested"] = _cluster_variant(
+        "congested",
+        tuple(ENGINE_METHODS),
+        dict(n_nodes=32, max_tasks_per_type=3 * mtpt, train_frac=0.5),
+    )
+    payload = {"scale": SCALE, "seed": SEED, "variants": variants}
     with open(CLUSTER_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote cluster rows to {CLUSTER_JSON}", file=sys.stderr)
-    _row(
-        "cluster/placement_program",
-        place_stats.get("program_wall_s", 0.0) * 1e6 / max(place_stats.get("program_calls", 1), 1),
-        f"calls={place_stats.get('program_calls', 0)} waits={place_stats.get('waits', 0)} "
-        f"rows={place_stats.get('rows', 0)}",
-        engine="batch",
-    )
+    for name, v in variants.items():
+        if v["placement"]["waits_host"]:
+            _fail(f"cluster/{name}: {v['placement']['waits_host']} host-resolved waits (want 0)")
+        if MIN_SPEEDUP is not None and v["warm_speedup"] < MIN_SPEEDUP:
+            _fail(f"cluster/{name}: warm speedup {v['warm_speedup']} < --min-speedup {MIN_SPEEDUP}")
 
 
 def bench_roofline() -> None:
@@ -624,7 +683,7 @@ BENCHES = {
 
 
 def main() -> None:
-    global SCALE
+    global SCALE, MIN_SPEEDUP, CONGESTED_ONLY
     args = sys.argv[1:]
     json_path = None
     if "--json" in args:
@@ -634,11 +693,22 @@ def main() -> None:
         except IndexError:
             raise SystemExit("--json requires a path argument")
         del args[i : i + 2]
+    if "--min-speedup" in args:
+        i = args.index("--min-speedup")
+        try:
+            MIN_SPEEDUP = float(args[i + 1])
+        except (IndexError, ValueError):
+            raise SystemExit("--min-speedup requires a numeric argument")
+        del args[i : i + 2]
     if "--smoke" in args:
         # CI-sized run: small corpus, same code paths (used by the workflow's
         # cluster step so placement-perf regressions surface in CI logs)
         args.remove("--smoke")
         SCALE = min(SCALE, 0.12)
+    if "--congested" in args:
+        # cluster bench: run only the congested variant
+        args.remove("--congested")
+        CONGESTED_ONLY = True
     names = args or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
@@ -650,6 +720,8 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump(_JSON_ROWS, f, indent=1)
         print(f"# wrote {len(_JSON_ROWS)} rows to {json_path}", file=sys.stderr)
+    if _FAILURES:
+        raise SystemExit(f"{len(_FAILURES)} bench assertion(s) failed (see FAIL lines above)")
 
 
 if __name__ == "__main__":

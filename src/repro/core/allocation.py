@@ -18,6 +18,20 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+# The event-timeline primitives (demand profiles, probe expressions, the
+# incremental profile) live in repro.core.timeline — the single
+# implementation every packer consumes.  Re-exported here because
+# allocations and their demand semantics are one API surface to callers.
+from repro.core.timeline import (  # noqa: F401  (re-exports)
+    IncrementalDemandProfile,
+    Timeline,
+    demand_exceeds,
+    demand_exceeds_many,
+    plan_profile_events,
+    shared_probe_set,
+    step_demand_profile,
+)
+
 MIB_PER_GIB = 1024.0
 
 
@@ -116,315 +130,6 @@ def pack_step_allocations(allocs: list[StepAllocation]) -> tuple[np.ndarray, np.
         val[r, :kk] = a.values
         val[r, kk:] = a.values[-1]
     return bnd, val
-
-
-def step_demand_profile(
-    bnd: np.ndarray, val: np.ndarray, starts: np.ndarray, releases: np.ndarray
-) -> tuple[np.ndarray, np.ndarray]:
-    """Total demand of R concurrent step reservations as a cumulative profile.
-
-    Args:
-      bnd: (R, kmax) boundaries, inf-padded past each reservation's k.
-      val: (R, kmax + 1) values with hold-last padding (the extra column is
-        the value held past the final boundary).
-      starts: (R,) absolute reservation start times (inclusive).
-      releases: (R,) absolute release times (exclusive: at ``releases[r]`` the
-        reservation no longer counts).
-
-    Returns (event times, cumulative demand): the total at time ``t`` is
-    ``cum[np.searchsorted(times, t, side="right")]``.  Eq. (1) steps are
-    right-open, so each step-up event sits at ``nextafter(switch)`` — the
-    first representable instant the higher value applies (an absolute epsilon
-    would underflow at large timestamps).
-
-    Shared by the cluster scheduler (``sim.cluster.NodeState``) and the
-    serving admission controller (``serve.admission``) so their boundary
-    semantics cannot drift apart.
-    """
-    sw = starts[:, None] + bnd
-    live = np.isfinite(bnd) & (sw < releases[:, None])
-    steps = val[:, 1:] - val[:, :-1]  # (R, kmax), aligned with bnd
-    # The released value must be derived from the same rounded switch times
-    # as ``live`` (counting switches that actually fired), or rounding could
-    # release a step that was never added and unbalance the profile forever.
-    idx_end = np.sum(live, axis=1)
-    v_end = np.take_along_axis(val, idx_end[:, None], axis=1)[:, 0]
-    times = np.concatenate([starts, np.nextafter(sw[live], np.inf), releases])
-    deltas = np.concatenate([val[:, 0], steps[live], -v_end])
-    order = np.argsort(times, kind="stable")
-    return times[order], np.concatenate([[0.0], np.cumsum(deltas[order])])
-
-
-def demand_exceeds(
-    times: np.ndarray,
-    cum: np.ndarray,
-    alloc: StepAllocation,
-    start: float,
-    end: float,
-    budget: float,
-    *,
-    inclusive_end: bool = False,
-) -> bool:
-    """Does profile demand + a candidate step reservation exceed ``budget``
-    anywhere in [start, end) — or [start, end] with ``inclusive_end``?
-
-    ``(times, cum)`` is a ``step_demand_profile``; the candidate holds
-    ``alloc`` from ``start``.  Demand is probed at the candidate's own
-    step-ups (``nextafter`` past each boundary inside the window) and just
-    after every profile event in the window — the only points where the
-    combined step function can rise.  Shared by ``NodeState.fits`` (cluster
-    placement; window right-open at the candidate's departure) and
-    ``AdmissionController.try_admit`` (HBM packing; a plan holds through its
-    final boundary inclusive), so their probe semantics cannot drift apart.
-    """
-    b = np.asarray(alloc.boundaries, dtype=np.float64)
-    probes = np.concatenate([[start], np.nextafter(start + b[b < end - start], np.inf)])
-    probes = probes[probes <= end] if inclusive_end else probes[probes < end]
-    lo = np.searchsorted(times, start, side="right")  # events at start fold into the start probe
-    hi = np.searchsorted(times, end, side="right" if inclusive_end else "left")
-    t_all = np.concatenate([probes, times[lo:hi]])
-    # Every probe — including the profile's own event times — reads the
-    # cumulative sum AFTER all events tied at that instant (searchsorted
-    # side="right"), never a partial mid-tie sum that exists at no real time.
-    prof = cum[np.searchsorted(times, t_all, side="right")]
-    return bool(np.any(prof + alloc.at(t_all - start) > budget))
-
-
-def demand_exceeds_many(
-    times: np.ndarray,
-    cum: np.ndarray,
-    alloc: StepAllocation,
-    starts: np.ndarray,
-    duration: float,
-    budget: float,
-) -> np.ndarray:
-    """``demand_exceeds`` vectorized over S candidate start times of ONE
-    allocation, with the cluster scheduler's right-open window
-    ``[start, start + duration)``.
-
-    Evaluates the exact probe expressions of the scalar function — the start,
-    each own switch instant passing both of its filters (``b < end - start``
-    and ``probe < end``), and every profile event strictly inside the window,
-    all read via ``searchsorted(..., "right")`` — so a True/False here is
-    bit-identical to S scalar calls.  This is the blocked-candidate wait
-    loop of the batched cluster scheduler: when a queued attempt fits no
-    node, every future completion instant is probed in one pass instead of
-    one ``demand_exceeds`` per popped event (see ``sim.cluster``).
-
-    Returns a (S,) bool array: True where demand would exceed ``budget``.
-    """
-    b = np.asarray(alloc.boundaries, dtype=np.float64)
-    v = np.asarray(alloc.values, dtype=np.float64)
-    k = len(b)
-    starts = np.asarray(starts, dtype=np.float64)
-    ends = starts + duration
-
-    def at(offsets):  # alloc.at, broadcast over any shape
-        idx = np.minimum(np.searchsorted(b, offsets, side="left"), k - 1)
-        return v[idx]
-
-    # own probes: [start] + nextafter(start + b) under the scalar's filters
-    p_sw = np.nextafter(starts[:, None] + b[None, :], np.inf)  # (S, k)
-    ok_sw = (b[None, :] < (ends - starts)[:, None]) & (p_sw < ends[:, None])
-    own_p = np.concatenate([starts[:, None], p_sw], axis=1)  # (S, k+1)
-    own_ok = np.concatenate([np.ones((len(starts), 1), dtype=bool), ok_sw], axis=1)
-    prof_own = cum[np.searchsorted(times, own_p, side="right")]
-    over = np.any(own_ok & (prof_own + at(own_p - starts[:, None]) > budget), axis=1)
-    # profile events strictly inside each window (the scalar's times[lo:hi]);
-    # only the slice any window can reach participates in the (S, E) probe
-    lo = np.searchsorted(times, starts.min(), side="right")
-    hi = np.searchsorted(times, ends.max(), side="left")
-    if hi > lo:
-        ev = times[lo:hi]
-        in_win = (ev[None, :] > starts[:, None]) & (ev[None, :] < ends[:, None])
-        prof_ev = cum[np.searchsorted(times, ev, side="right")]  # after each tie group
-        over |= np.any(in_win & (prof_ev[None, :] + at(ev[None, :] - starts[:, None]) > budget), axis=1)
-    return over
-
-
-def plan_profile_events(
-    boundaries: np.ndarray, values: np.ndarray, start: float, release: float
-) -> tuple[np.ndarray, np.ndarray]:
-    """One reservation's demand events, exactly as ``step_demand_profile``
-    derives them for a row: ``(times, deltas)`` sorted by time — the start
-    (+v_0), each live switch at ``nextafter`` past its boundary (the step
-    delta), and the release (-v_end, where v_end counts only switches that
-    actually fired before ``release``).  The multiset of events produced for a
-    reservation set equals ``step_demand_profile``'s, which is what lets
-    ``IncrementalDemandProfile`` maintain the same profile under add/remove
-    instead of rebuilding it."""
-    b = np.asarray(boundaries, dtype=np.float64)
-    v = np.asarray(values, dtype=np.float64)
-    sw = start + b
-    live = np.isfinite(b) & (sw < release)
-    steps = np.append(np.diff(v), 0.0)  # step at the final boundary is 0 (hold-last)
-    idx_end = int(np.sum(live))
-    v_end = v[-1] if idx_end >= len(v) else v[idx_end]
-    times = np.concatenate([[start], np.nextafter(sw[live], np.inf), [release]])
-    deltas = np.concatenate([[v[0]], steps[live], [-v_end]])
-    return times, deltas
-
-
-class IncrementalDemandProfile:
-    """``step_demand_profile`` maintained incrementally under add / remove /
-    expire, keyed by owner.
-
-    The full rebuild re-packs every reservation and re-sorts all events
-    (O(R k + E log E) per mutation); this keeps the sorted event arrays live
-    and merges one reservation's ~k+2 events in O(E + k) (``np.searchsorted``
-    + ``np.insert``), recomputing the cumulative sum lazily in one O(E) pass.
-    Event *values* are identical to the rebuilt profile's; only the order of
-    time-tied events can differ, which probes never observe (they read the
-    cumulative sum after all events tied at an instant, see
-    ``step_demand_profile``) beyond float-summation rounding.
-
-    This is the serving admission controller's backing store: thousands of
-    admission decisions per second each touch the profile, so per-decision
-    rebuild cost is the scalar path's bottleneck.
-    """
-
-    def __init__(self):
-        self._times = np.empty(0, dtype=np.float64)
-        self._deltas = np.empty(0, dtype=np.float64)
-        self._codes = np.empty(0, dtype=np.int64)
-        self._next_code = 0
-        self._owners: dict = {}  # owner -> event code
-        self._releases: dict = {}  # owner -> release time (for expire())
-        self._cum: np.ndarray | None = None
-        # lower bound on min(self._releases.values()); lets expire() return
-        # without scanning the owner dict (the scheduler calls it per epoch).
-        # Stale-low is safe: the fast path just isn't taken.
-        self._min_release = np.inf
-
-    @property
-    def n_events(self) -> int:
-        return len(self._times)
-
-    @property
-    def n_owners(self) -> int:
-        return len(self._owners)
-
-    def __contains__(self, owner) -> bool:
-        return owner in self._owners
-
-    def add(self, owner, boundaries: np.ndarray, values: np.ndarray, start: float, release: float) -> None:
-        """Merge one reservation's events into the profile (O(E + k)) —
-        the scalar twin of ``add_many``, skipping its batch plumbing (the
-        congested cluster scheduler commits one reservation per wait)."""
-        if owner in self._owners:
-            raise ValueError(f"owner(s) already hold a reservation: [{owner!r}]")
-        t, d = plan_profile_events(boundaries, values, float(start), float(release))
-        code = self._next_code
-        self._next_code += 1
-        self._owners[owner] = code
-        self._releases[owner] = float(release)
-        self._min_release = min(self._min_release, float(release))
-        self._splice(t, d, np.full(len(t), code, dtype=np.int64))
-
-    def add_many(self, owners, boundaries: np.ndarray, values: np.ndarray, starts, releases) -> None:
-        """Merge R reservations in one pass: their events are concatenated
-        (each reservation's own events are already time-sorted), sorted once,
-        and spliced into the live arrays with a single insert — the batch
-        commit path of the admission engine and of the batched cluster
-        scheduler's per-epoch placements (one O(E + R k log(R k)) splice per
-        batch instead of R separate merges).
-
-        Event construction is the fully-vectorized twin of
-        ``plan_profile_events`` — row-major flattening keeps each row's
-        events grouped in commit order, so with the stable time sort the
-        spliced arrays are **bit-identical** to R sequential ``add`` calls
-        (time-tied events land in the same order a ``side="right"`` insert
-        would put them)."""
-        owners = list(owners)
-        dup = [o for o in owners if o in self._owners]
-        if dup or len(set(owners)) != len(owners):
-            raise ValueError(f"owner(s) already hold a reservation: {dup or owners!r}")
-        R = len(owners)
-        if R == 0:
-            return
-        b = np.asarray(boundaries, dtype=np.float64).reshape(R, -1)
-        v = np.asarray(values, dtype=np.float64).reshape(R, -1)
-        starts = np.asarray(starts, dtype=np.float64).reshape(R)
-        rels = np.asarray(releases, dtype=np.float64).reshape(R)
-        codes = np.arange(self._next_code, self._next_code + R, dtype=np.int64)
-        self._next_code += R
-        for o, c_, rl in zip(owners, codes, rels):
-            self._owners[o] = int(c_)
-            self._releases[o] = float(rl)
-        self._min_release = min(self._min_release, float(rels.min()))
-        sw = starts[:, None] + b
-        live = np.isfinite(b) & (sw < rels[:, None])
-        steps = np.concatenate([np.diff(v, axis=1), np.zeros((R, 1))], axis=1)
-        vext = np.concatenate([v, v[:, -1:]], axis=1)
-        v_end = np.take_along_axis(vext, np.sum(live, axis=1)[:, None], axis=1)[:, 0]
-        times = np.concatenate([starts[:, None], np.nextafter(sw, np.inf), rels[:, None]], axis=1)
-        deltas = np.concatenate([v[:, :1], steps, -v_end[:, None]], axis=1)
-        mask = np.concatenate([np.ones((R, 1), bool), live, np.ones((R, 1), bool)], axis=1)
-        m = mask.ravel()
-        t = times.ravel()[m]
-        d = deltas.ravel()[m]
-        c = np.repeat(codes, mask.shape[1])[m]
-        order = np.argsort(t, kind="stable")
-        self._splice(t[order], d[order], c[order])
-
-    def _splice(self, t: np.ndarray, d: np.ndarray, c: np.ndarray) -> None:
-        """Merge time-sorted events into the live arrays — one manual splice
-        for all three (np.insert's index normalization costs more than the
-        merge itself at this size), ``side="right"`` so time-tied newcomers
-        land after existing events."""
-        E, n = len(self._times), len(t)
-        pos = np.searchsorted(self._times, t, side="right") + np.arange(n)
-        old_pos = np.ones(E + n, dtype=bool)
-        old_pos[pos] = False
-        times = np.empty(E + n)
-        deltas = np.empty(E + n)
-        codes = np.empty(E + n, dtype=np.int64)
-        times[pos], times[old_pos] = t, self._times
-        deltas[pos], deltas[old_pos] = d, self._deltas
-        codes[pos], codes[old_pos] = c, self._codes
-        self._times, self._deltas, self._codes = times, deltas, codes
-        self._cum = None
-
-    def remove(self, owner) -> None:
-        """Drop one reservation's events (O(E)); no-op for unknown owners."""
-        code = self._owners.pop(owner, None)
-        if code is None:
-            return
-        self._releases.pop(owner, None)
-        keep = self._codes != code
-        self._times = self._times[keep]
-        self._deltas = self._deltas[keep]
-        self._codes = self._codes[keep]
-        self._cum = None
-
-    def expire(self, now: float) -> None:
-        """Garbage-collect reservations fully released at or before ``now``.
-
-        A released reservation's deltas telescope to zero past its release,
-        so dropping its events cannot change any probe at ``t >= now`` —
-        this only bounds the event count for long-running controllers."""
-        if now < self._min_release:
-            return
-        gone = [o for o, r in self._releases.items() if r <= now]
-        if not gone:
-            return
-        codes = np.asarray([self._owners.pop(o) for o in gone], dtype=np.int64)
-        for o in gone:
-            self._releases.pop(o, None)
-        self._min_release = min(self._releases.values(), default=np.inf)
-        keep = ~np.isin(self._codes, codes)
-        self._times = self._times[keep]
-        self._deltas = self._deltas[keep]
-        self._codes = self._codes[keep]
-        self._cum = None
-
-    def arrays(self) -> tuple[np.ndarray, np.ndarray]:
-        """(event times (E,), cumulative demand (E+1,)) — read exactly like
-        ``step_demand_profile``'s output: the total at ``t`` is
-        ``cum[np.searchsorted(times, t, side="right")]``."""
-        if self._cum is None:
-            self._cum = np.concatenate([[0.0], np.cumsum(self._deltas)])
-        return self._times, self._cum
 
 
 @dataclasses.dataclass

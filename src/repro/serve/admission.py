@@ -17,35 +17,37 @@ Two controllers implement the same policy:
   ``demand_exceeds`` probe per candidate against a profile rebuilt from the
   active set whenever it changes.
 * ``BatchedAdmissionController`` — the device engine: active plans live in an
-  incrementally-maintained cumulative profile
-  (``core.allocation.IncrementalDemandProfile``), and whole *batches* of
-  candidates are decided by one jitted program — the union-of-switch-points
+  incrementally-maintained event timeline (``core.timeline.Timeline``), and
+  whole *batches* of candidates are decided by one jitted program
+  (``sim.device_timeline.admission_program``) — the union-of-switch-points
   probe becomes a ``searchsorted`` read of the cached profile at a shared
-  padded probe set, and a ``lax.scan`` over the batch threads the
-  within-batch sequential dependency (an admitted candidate's demand is
-  visible to every later candidate, exactly as if the scalar controller had
-  processed them one at a time).  Decision parity with the oracle is exact on
-  randomized streams (``tests/test_serve_batch.py``); the device program runs
-  in float64 (``jax.experimental.enable_x64``) because the profile's
-  ``nextafter`` switch events are below float32 resolution at serving
-  timestamps.
+  deduped probe set (``core.timeline.shared_probe_set``), and a ``lax.scan``
+  over the batch threads the within-batch sequential dependency (an admitted
+  candidate's demand is visible to every later candidate, exactly as if the
+  scalar controller had processed them one at a time).  Decision parity with
+  the oracle is exact on randomized streams (``tests/test_serve_batch.py``);
+  the device program runs in float64 (``jax.experimental.enable_x64``)
+  because the profile's ``nextafter`` switch events are below float32
+  resolution at serving timestamps.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
-from repro.core.allocation import (
-    IncrementalDemandProfile,
-    StepAllocation,
+from repro.core.allocation import StepAllocation, pack_step_allocations
+from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+from repro.core.timeline import (
+    Timeline,
     demand_exceeds,
-    pack_step_allocations,
+    shared_probe_set,
     step_demand_profile,
 )
-from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+
+# Historical alias kept for external callers of the controller internals.
+IncrementalDemandProfile = Timeline
 
 
 @dataclasses.dataclass
@@ -180,51 +182,6 @@ class AdmissionController(_AdmissionBase):
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
-def _admit_program():
-    """The jitted batch-admission program (compiled per padded shape bucket).
-
-    Shapes: P/prof (Pp,) shared probe set and profile reads; per-candidate
-    starts/ends/rels/valid (Cp,); bnd/val/sw/live (Cp, k); valext (Cp, k+1).
-    Padding: P with +inf (masked by isfinite), candidates with
-    valid=False / start=+inf (their window and member masks are empty).
-
-    Per candidate the fit check is the scalar ``demand_exceeds`` with
-    ``inclusive_end=True``: max over every probe point in [start, end] of
-    profile + earlier-admitted-batch demand + own allocation, compared
-    strictly against the budget.  The probe set P is the union of all profile
-    events and every candidate's start/switch instants, so it contains every
-    point where combined demand can rise inside any candidate's window —
-    extra in-window points only re-sample the step function and cannot change
-    the max.  The per-(candidate, probe) demand pieces come from
-    ``batch_engine.candidate_probe_parts``, shared with the cluster
-    scheduler's placement program so the two packers' boundary semantics
-    cannot drift apart.  A ``lax.scan`` threads the within-batch dependency:
-    an admitted candidate's demand (table-lookup of its own step function,
-    live on [start, release)) is added to the carry that later candidates
-    probe.
-    """
-    import jax
-    import jax.numpy as jnp
-
-    from repro.sim.batch_engine import candidate_probe_parts
-
-    def run(P, prof, starts, ends, rels, bnd, val, valext, sw, live, valid, budget):
-        A, M, D = candidate_probe_parts(
-            P, starts, ends, rels, bnd, val, valext, sw, live, inclusive_end=True
-        )
-
-        def step(extra, row):
-            a, d, m, ok = row
-            admit = ok & ~jnp.any(m & (prof + extra + a > budget))
-            return extra + jnp.where(admit, d, 0.0), admit
-
-        _, admits = jax.lax.scan(step, jnp.zeros_like(P), (A, D, M, valid))
-        return admits
-
-    return jax.jit(run)
-
-
 class BatchedAdmissionController(_AdmissionBase):
     """Device-batched twin of ``AdmissionController``.
 
@@ -325,6 +282,7 @@ class BatchedAdmissionController(_AdmissionBase):
 
     def _admit_device(self, request_ids, bnd, val, starts, ends, rels):
         from repro.sim.batch_engine import bucket_size, pad_rows
+        from repro.sim.device_timeline import admission_program
 
         C = len(request_ids)
         sw = np.nextafter(starts[:, None] + bnd, np.inf)  # switch instants (right-open steps)
@@ -333,11 +291,12 @@ class BatchedAdmissionController(_AdmissionBase):
         times, cum = self._prof.arrays()
 
         # Shared probe set: all profile events + every candidate's start and
-        # switch instants, padded to a bucket so compiled shapes are bounded.
-        P = np.concatenate([times, starts, sw.ravel()])
-        P = np.sort(P)
+        # switch instants, deduped (overlapping candidate boundaries repeat
+        # heavily and would inflate the padded probe bucket) and padded to a
+        # bucket so compiled shapes are bounded.
+        P = shared_probe_set(times, starts, sw.ravel())
         Pp = bucket_size(len(P))
-        prof_at_p = cum[np.searchsorted(times, P, side="right")]
+        prof_at_p = self._prof.demand_at(P)
         P = np.concatenate([P, np.full(Pp - len(P), np.inf)])
         prof_at_p = np.concatenate([prof_at_p, np.full(Pp - len(prof_at_p), 0.0)])
         Cp = bucket_size(C)
@@ -357,7 +316,7 @@ class BatchedAdmissionController(_AdmissionBase):
         from jax.experimental import enable_x64
 
         with enable_x64():
-            admits = np.asarray(_admit_program()(*args, self.budget))[:C]
+            admits = np.asarray(admission_program()(*args, self.budget))[:C]
 
         adm = np.flatnonzero(admits)
         if len(adm):

@@ -21,15 +21,16 @@ path's ``IncrementalDemandProfile``):
   retry ladder (attempt -> allocation, failure index, wastage) precomputed
   for **all** policies in one pass of bucket-padded vmapped device programs
   (``repro.sim.batch_engine.compute_cluster_ladders``), and placement itself
-  batched per wait epoch: one jitted ``searchsorted``-probe program decides
-  the whole (candidate x node) first-fit matrix for a window of attempt
-  rows, a ``lax.scan`` threading within-epoch sequencing
-  (``batch_engine.first_fit_epoch``), and blocked candidates waiting via one
-  vectorized probe over the completion heap.  Predictions see exactly the
-  executions the sequential protocol would have observed (completed earlier
-  executions of the same task type), so per-task outcomes match the oracle
-  run with ``KSegmentsConfig(error_mode="progressive")`` — see
-  tests/test_cluster_batch.py and tests/test_cluster_placement.py.
+  a sequence of device scheduling epochs
+  (``repro.sim.device_timeline.schedule_epoch``): the event clock and the
+  per-node release heap live in the program's scan carry, so a window of
+  attempt rows is placed — *including* every wait on a future completion —
+  in one dispatch, with no host round-trip per blocked row.  Predictions see
+  exactly the executions the sequential protocol would have observed
+  (completed earlier executions of the same task type), so per-task outcomes
+  match the oracle run with ``KSegmentsConfig(error_mode="progressive")`` —
+  see tests/test_cluster_batch.py, tests/test_cluster_placement.py and
+  tests/test_cluster_congested.py.
 """
 
 from __future__ import annotations
@@ -40,16 +41,14 @@ import time
 
 import numpy as np
 
-from repro.core.allocation import (
-    IncrementalDemandProfile,
-    StepAllocation,
-    demand_exceeds,
-    demand_exceeds_many,
-    score_attempt_np,
-)
+from repro.core.allocation import StepAllocation, score_attempt_np
 from repro.core.ksegments import KSegmentsConfig
 from repro.core.predictor import AllocationMethod, make_method
+from repro.core.timeline import Timeline, demand_exceeds_many
 from repro.sim.traces import TaskTrace, WorkflowTrace
+
+# Historical alias: NodeState's backing store predates the shared timeline.
+IncrementalDemandProfile = Timeline
 
 
 @dataclasses.dataclass
@@ -96,8 +95,7 @@ class NodeState:
     def reserved_at(self, t: float) -> float:
         """Total reserved MiB at time ``t`` (one profile probe — same source
         of truth as fits())."""
-        times, cum = self.profile_arrays()
-        return float(cum[np.searchsorted(times, t, side="right")])
+        return float(self._sync().demand_at(t))
 
     def add(self, end: float, alloc: StepAllocation, start: float) -> None:
         """Reserve ``alloc`` over [start, end) — one O(E + k) event splice."""
@@ -123,12 +121,12 @@ class NodeState:
     def fits(self, alloc: StepAllocation, start: float, duration: float) -> bool:
         """Can the candidate's reservation be placed over [start,
         start + duration) without the combined step profile exceeding
-        capacity?  One ``demand_exceeds`` probe pass against the node's
-        cached cumulative profile — this is the scheduler's placement inner
-        loop, and per-checkpoint scalar probes dominated whole cluster runs."""
-        times, cum = self.profile_arrays()
-        return not demand_exceeds(
-            times, cum, alloc, start, start + duration, self.capacity_mib + 1e-6
+        capacity?  One ``Timeline.demand_exceeds`` probe pass against the
+        node's cached cumulative profile — this is the scheduler's placement
+        inner loop, and per-checkpoint scalar probes dominated whole cluster
+        runs."""
+        return not self._sync().demand_exceeds(
+            alloc, start, start + duration, self.capacity_mib + 1e-6
         )
 
 
@@ -290,84 +288,23 @@ def run_cluster(
     )
 
 
-# Consecutive no-wait host placements before the congested scheduler hands
-# back to the device window (see _place_rows_batched): 1 thrashes on
-# isolated successes between waits, large values keep whole streams on the
-# slow scalar path; 2 measured best across corpus scales.
-_STREAK_RESUME = 2
-
-
-def _first_fit_now(profs, budget: float, alloc: StepAllocation, now: float, duration: float):
-    """Scalar first-fit at a fixed clock — the oracle's per-node ``fits``
-    pass against the nodes' cached cumulative profiles.  Returns the lowest
-    fitting node index or None."""
-    for ni, prof in enumerate(profs):
-        times, cum = prof.arrays()
-        if not demand_exceeds(times, cum, alloc, now, now + duration, budget):
-            return ni
-    return None
-
-
-def _wait_for_fit(
-    profs,
-    budget: float,
-    events: list[tuple[float, int]],
-    now: float,
-    alloc: StepAllocation,
-    duration: float,
-) -> tuple[int, float]:
-    """The blocked-candidate wait loop of the batched scheduler, mirroring
-    ``_find_slot``'s event-pop semantics: pop completion instants until some
-    node fits, return (node, time).  The profile is frozen while a candidate
-    waits (nothing commits until it places, and expiry never changes a probe
-    at t >= now), so instead of one ``fits`` pass per popped event the
-    sorted snapshot of the heap is probed chunk-wise with
-    ``demand_exceeds_many``, and exactly the events the sequential oracle
-    would have consumed are popped."""
-    while True:
-        if not events:
-            # unreachable for capped allocations (an empty node always fits),
-            # kept as the oracle's same last-resort clock step
-            now += 1.0
-            ni = _first_fit_now(profs, budget, alloc, now, duration)
-            if ni is not None:
-                return ni, now
-            continue
-        snap = sorted(events)
-        all_t = np.maximum(now, np.asarray([t for t, _ in snap]))
-        # chunked scan: a blocked candidate usually fits within the next few
-        # completions, so probe the snapshot a slice at a time instead of
-        # building the full (S, events) matrices up front
-        for c0 in range(0, len(all_t), 8):
-            cand_t = all_t[c0 : c0 + 8]
-            fit = np.stack(
-                [
-                    ~demand_exceeds_many(*prof.arrays(), alloc, cand_t, duration, budget)
-                    for prof in profs
-                ]
-            )  # (N, S)
-            any_t = fit.any(axis=0)
-            if any_t.any():
-                i = int(np.argmax(any_t))
-                for _ in range(c0 + i + 1):
-                    heapq.heappop(events)
-                return int(np.argmax(fit[:, i])), float(cand_t[i])
-        for _ in range(len(snap)):
-            heapq.heappop(events)
-        now = float(all_t[-1])
-
-
 def _policy_rows(ladders, queue, policy: str):
     """Flatten one policy's retry ladders into placement rows (queue x
     attempt order): (boundaries (R, k), values (R, k), run times (R,),
-    attempts per task (Q,), wastage per task (Q,)).
+    probe durations (R,), attempts per task (Q,), wastage per task (Q,)).
+
+    ``run times`` are each attempt's node *occupancy* (up to and including
+    the kill sample on failure); ``probe durations`` are the execution's
+    full duration — the window the scheduler fit-checks, since it cannot
+    know an attempt will die early (``run_cluster`` probes ``_find_slot``
+    with the full duration and only occupies the truncated window).
 
     Works trace-block-wise straight off the ``TaskLadders`` tensors
     (``_eligible_queue`` emits each trace's executions contiguously) — the
     per-row quantities are ``AttemptLadder.run_time_s`` /
     ``total_wastage_gib_s`` vectorized, including ``row()``'s convergence
     check."""
-    bnds, vals, runs, counts_all, waste = [], [], [], [], []
+    bnds, vals, runs, probes, counts_all, waste = [], [], [], [], [], []
     Q = len(queue)
     i0 = 0
     while i0 < Q:
@@ -389,6 +326,7 @@ def _policy_rows(ladders, queue, policy: str):
         )
         mask = np.arange(fi.shape[1])[None, :] < counts[:, None]
         runs.append(np.where(fi < 0, durations[:, None], (fi + 1) * trace.interval_s)[mask])
+        probes.append(np.broadcast_to(durations[:, None], mask.shape)[mask])
         vals.append(tl.values[mi, execs][mask])
         k = tl.boundaries.shape[-1]
         bnds.append(np.broadcast_to(tl.boundaries[mi, execs][:, None, :], (*mask.shape, k))[mask])
@@ -399,6 +337,7 @@ def _policy_rows(ladders, queue, policy: str):
         np.concatenate(bnds),
         np.concatenate(vals),
         np.concatenate(runs).astype(np.float64),
+        np.concatenate(probes).astype(np.float64),
         np.concatenate(counts_all),
         np.concatenate(waste),
     )
@@ -408,32 +347,45 @@ def _place_rows_batched(
     bnd_rows: np.ndarray,
     val_rows: np.ndarray,
     run_rows: np.ndarray,
+    probe_rows: np.ndarray,
     n_nodes: int,
     node_mib: float,
     window: int,
     stats: dict | None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Place all of one policy's attempt rows with the wait-epoch device
-    program.  Returns per-row (node, start, end) arrays with the sequential
+    """Place all of one policy's attempt rows with the device timeline
+    programs.  Returns per-row (node, start, end) arrays with the sequential
     oracle's exact placement semantics.
 
-    Hybrid dispatch, the same shape as ``BatchedAdmissionController``'s: in
-    the *streaming* regime (placements succeeding at the current clock) one
-    device program decides a whole window of rows per dispatch
-    (``first_fit_epoch``); when a row blocks, the scheduler drops into the
-    *congested* regime — the oracle's own probe expressions host-side (one
-    scalar first-fit per row, the chunked ``_wait_for_fit`` event scan while
-    nothing fits), where a device round-trip per single placement would cost
-    more than it decides — and returns to the device window as soon as a row
-    places without waiting.  Decisions are identical in both regimes (the
-    parity suite covers corpora that exercise both)."""
+    Two device regimes, zero host-resolved waits:
+
+    * **streaming** — while rows keep placing at the current clock, the
+      cheap fixed-clock window program (``device_timeline.first_fit_window``)
+      decides a whole window per dispatch against host-precomputed probe
+      reads.
+    * **congested** — from the first blocked row, the scheduling-epoch
+      program (``device_timeline.schedule_epoch``) takes over: the event
+      clock and the pending-completion heap live in its carry, so a blocked
+      row waits **in-program** — the program pops upcoming releases,
+      advances the clock and re-probes, exactly the oracle's ``_find_slot``
+      event-pop semantics — instead of paying a host round-trip per wait.
+      The scheduler returns to streaming once an epoch resolves without
+      waiting.
+
+    Between dispatches the host mirrors the commits into the per-node
+    ``Timeline``s (one ``add_many`` splice per node, bit-identical event
+    order) and drops the consumed completions, so the next epoch is seeded
+    from the same profiles the oracle probes.  The only remaining host
+    placement is the oracle's last-resort +1.0 clock walk when the
+    completion heap drains with a row still unplaced — unreachable for
+    node-capped allocations, counted in ``waits_host``."""
     from jax.experimental import enable_x64  # deferred: keeps the oracle jax-free
 
-    from repro.sim.batch_engine import first_fit_epoch
+    from repro.sim.device_timeline import first_fit_window, schedule_epoch
 
     R = len(run_rows)
-    profs = [IncrementalDemandProfile() for _ in range(n_nodes)]
-    events: list[tuple[float, int]] = []
+    profs = [Timeline() for _ in range(n_nodes)]
+    pending: list[float] = []  # completion instants not yet consumed by a wait
     budget = node_mib + 1e-6  # NodeState.fits budget
     row_node = np.empty(R, dtype=np.int64)
     row_start = np.empty(R, dtype=np.float64)
@@ -442,73 +394,112 @@ def _place_rows_batched(
     now = 0.0
     r = 0
     congested = False
-    streak = 0  # consecutive no-wait host placements while congested
+
+    def _commit(npl, nidx, starts, t0):
+        """Mirror one dispatch's placements into the host timelines/outputs."""
+        nonlocal owner, r
+        if stats is not None:
+            stats["program_calls"] += 1
+            stats["program_wall_s"] += time.perf_counter() - t0
+        ends = starts[:npl] + run_rows[r : r + npl]
+        # committing per node in row order splices time-tied events in
+        # exactly the order the oracle's one-at-a-time add() would
+        for n in np.unique(nidx[:npl]):
+            m = np.flatnonzero(nidx[:npl] == n)
+            profs[n].add_many(
+                range(owner, owner + len(m)),
+                bnd_rows[r + m],
+                val_rows[r + m],
+                starts[m],
+                ends[m],
+            )
+            owner += len(m)
+        row_node[r : r + npl] = nidx[:npl]
+        row_start[r : r + npl] = starts[:npl]
+        row_end[r : r + npl] = ends
+        r += npl
+        return [float(e) for e in ends]
+
+    expired_at = -np.inf
     with enable_x64():  # one context across all epoch dispatches
         while r < R:
-            for prof in profs:
-                prof.expire(now)
-            if congested:
-                # host regime: place row r the oracle way, wait when needed
-                alloc = StepAllocation(bnd_rows[r], val_rows[r])
-                dur = float(run_rows[r])
-                ni = _first_fit_now(profs, budget, alloc, now, dur)
-                if ni is None:
-                    streak = 0
-                    ni, now = _wait_for_fit(profs, budget, events, now, alloc, dur)
-                    if stats is not None:
-                        stats["waits"] += 1
-                else:
-                    # only a sustained run of no-wait placements is worth a
-                    # device round-trip; isolated successes between waits
-                    # stay on the host path
-                    streak += 1
-                    congested = streak < _STREAK_RESUME
-                    if not congested:
-                        streak = 0
-                end = now + dur
-                profs[ni].add(owner, bnd_rows[r], val_rows[r], now, end)
-                owner += 1
-                heapq.heappush(events, (end, ni))
-                row_node[r], row_start[r], row_end[r] = ni, now, end
-                r += 1
-                continue
+            if now > expired_at:
+                # the clock only moves when a row waits, so most windows skip
+                # the N-node expiry sweep entirely
+                for prof in profs:
+                    prof.expire(now)
+                expired_at = now
             w = min(window, R - r)
+            if not congested:
+                t0 = time.perf_counter()
+                placed, nidx = first_fit_window(
+                    now,
+                    bnd_rows[r : r + w],
+                    val_rows[r : r + w],
+                    run_rows[r : r + w],
+                    probe_rows[r : r + w],
+                    [prof.arrays() for prof in profs],
+                    budget,
+                    window,
+                )
+                npl = w if placed.all() else int(np.argmin(placed))
+                pending += _commit(npl, nidx, np.full(npl, now), t0)
+                if r < R and npl < w:
+                    congested = True  # row r must wait: epoch program takes over
+                continue
+            # small wait windows: every row-step of the epoch program pays
+            # for its carried clock/heap machinery, so congested dispatches
+            # place a handful of rows per call and hand back to streaming
+            # as soon as a window resolves without waiting
+            w = min(w, 8)
             t0 = time.perf_counter()
-            placed, nidx = first_fit_epoch(
+            placed, nidx, starts, now, n_pops, n_waited, dead = schedule_epoch(
                 now,
                 bnd_rows[r : r + w],
                 val_rows[r : r + w],
                 run_rows[r : r + w],
-                [prof.arrays() for prof in profs],
+                [prof.events() for prof in profs],
+                np.asarray(pending),
                 budget,
-                window,
+                min(window, 8),
+                probe_times=probe_rows[r : r + w],
             )
             if stats is not None:
-                stats["program_calls"] += 1
-                stats["program_wall_s"] += time.perf_counter() - t0
+                stats["waits_program"] += n_waited
             npl = w if placed.all() else int(np.argmin(placed))
-            if npl:
-                ends = now + run_rows[r : r + npl]
-                # committing per node in row order splices time-tied events in
-                # exactly the order the oracle's one-at-a-time add() would
-                for n in np.unique(nidx[:npl]):
-                    m = np.flatnonzero(nidx[:npl] == n)
-                    profs[n].add_many(
-                        range(owner, owner + len(m)),
-                        bnd_rows[r + m],
-                        val_rows[r + m],
-                        np.full(len(m), now),
-                        ends[m],
-                    )
-                    owner += len(m)
-                for j in range(npl):
-                    heapq.heappush(events, (float(ends[j]), int(nidx[j])))
-                row_node[r : r + npl] = nidx[:npl]
-                row_start[r : r + npl] = now
-                row_end[r : r + npl] = ends
-                r += npl
+            ends = _commit(npl, nidx, starts, t0)
+            # the program consumed the n_pops earliest completions of the
+            # merged heap (pop order among time-ties is unobservable)
+            pending = sorted(pending + ends)[n_pops:]
+            congested = n_waited > 0  # stream again once a window stops waiting
+            if r < R and npl < w and not dead:
+                # a full per-node commit buffer aborted the epoch; nothing of
+                # row r was consumed — re-dispatch from fresh timelines
+                congested = True
+                continue
             if r < R and npl < w:
-                congested = True  # the program blocked on row r
+                # heap drained with row r unplaced: the oracle's last-resort
+                # +1.0 clock walk (unreachable for node-capped allocations —
+                # an empty node always fits once everything released)
+                if stats is not None:
+                    stats["waits_host"] += 1
+                alloc = StepAllocation(bnd_rows[r], val_rows[r])
+                pdur = float(probe_rows[r])  # fit-check the full duration ...
+                ni = None
+                while ni is None:
+                    now += 1.0
+                    for prof in profs:
+                        prof.expire(now)
+                    for i, prof in enumerate(profs):
+                        if not prof.demand_exceeds(alloc, now, now + pdur, budget):
+                            ni = i
+                            break
+                end = now + float(run_rows[r])  # ... but occupy the real run
+                profs[ni].add(owner, bnd_rows[r], val_rows[r], now, end)
+                owner += 1
+                pending = sorted(pending + [end])
+                row_node[r], row_start[r], row_end[r] = ni, now, end
+                r += 1
     return row_node, row_start, row_end
 
 
@@ -524,6 +515,7 @@ def run_cluster_batched(
     max_attempts: int = 32,
     placement_window: int = 32,
     placement_stats: dict | None = None,
+    ladder_x64: bool = False,
 ) -> dict[str, ClusterResult]:
     """Evaluate every policy through the cluster in one device pass.
 
@@ -531,22 +523,25 @@ def run_cluster_batched(
     policies at once — come from one shared tensor of (attempt -> allocation,
     failure index, wastage) rows computed by bucket-padded vmapped scans
     (``compute_cluster_ladders``, truncated to the executions the queue can
-    reach); placement itself is batched too: at each scheduling epoch one
-    jitted program (``batch_engine.first_fit_epoch``) decides the whole
-    (candidate x node) first-fit matrix for a window of attempt rows, with a
-    ``lax.scan`` making earlier placements' demand visible to later
-    candidates, and a blocked candidate waits via one vectorized probe of
-    the completion heap (``_wait_for_fit``).  Returns {policy: ClusterResult}
-    with the same per-task records as the sequential oracle
+    reach); placement itself runs as device scheduling epochs
+    (``device_timeline.schedule_epoch``): each dispatch places a whole window
+    of attempt rows with the event clock and release heap in the program's
+    carry, so blocked rows wait in-program instead of paying a host
+    round-trip per wait.  Returns {policy: ClusterResult} with the same
+    per-task records as the sequential oracle
     (tests/test_cluster_placement.py asserts exact (node, start, end) parity
-    per attempt).
+    per attempt; tests/test_cluster_congested.py stresses the wait path).
 
-    ``placement_stats``, when passed, accumulates
-    ``{"program_calls", "program_wall_s", "waits", "rows"}`` for the bench.
+    ``placement_stats``, when passed, accumulates ``{"program_calls",
+    "program_wall_s", "waits_program", "waits_host", "rows"}`` for the bench
+    (``waits_program`` = rows whose wait was resolved inside the device
+    program; ``waits_host`` = last-resort host clock walks, 0 in practice).
 
     k-Segments policies run with progressive error offsets (the device
     engine's bounded-carry mode); ``ksegments_config.error_mode`` other than
-    "progressive" is rejected to keep results honest.
+    "progressive" is rejected to keep results honest.  ``ladder_x64`` runs
+    the ladder scan in float64, closing the rare f32 ulp-boundary parity gap
+    against the float64 numpy predictors at ~1.5x ladder cost.
     """
     from repro.sim.batch_engine import compute_cluster_ladders  # deferred: keeps the oracle jax-free
 
@@ -563,13 +558,13 @@ def run_cluster_batched(
         dataclasses.replace(t, executions=t.executions[: n_train + max_tasks_per_type])
         for t, n_train in traces
     ]
-    ladders = compute_cluster_ladders(trunc, policies, node_mib, kcfg, max_attempts)
+    ladders = compute_cluster_ladders(trunc, policies, node_mib, kcfg, max_attempts, x64=ladder_x64)
 
     def _run_policy(policy: str) -> tuple[str, ClusterResult, dict]:
-        stats = {"program_calls": 0, "program_wall_s": 0.0, "waits": 0, "rows": 0}
-        bnd_rows, val_rows, run_rows, counts, waste = _policy_rows(ladders, queue, policy)
+        stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
+        bnd_rows, val_rows, run_rows, probe_rows, counts, waste = _policy_rows(ladders, queue, policy)
         row_node, row_start, row_end = _place_rows_batched(
-            bnd_rows, val_rows, run_rows, n_nodes, node_mib, placement_window, stats
+            bnd_rows, val_rows, run_rows, probe_rows, n_nodes, node_mib, placement_window, stats
         )
         stats["rows"] = len(run_rows)
         offsets = np.concatenate([[0], np.cumsum(counts)])

@@ -1,0 +1,654 @@
+"""Device programs over the event timeline (``repro.core.timeline``).
+
+Both batched packers — the serving admission engine (``serve.admission``)
+and the cluster scheduler's placement loop (``sim.cluster``) — evaluate the
+same quantities per (candidate, probe instant); this module holds their
+jitted programs so the boundary semantics live in exactly one place:
+
+* ``candidate_probe_parts`` — the per-(candidate, probe) demand pieces every
+  packing program needs (own allocation value, window membership, committed
+  demand contribution): the jnp twin of what ``core.timeline`` expresses in
+  numpy.
+* ``admission_program`` — whole candidate batches admitted against the HBM
+  budget with a ``lax.scan`` threading within-batch sequencing.
+* ``schedule_epoch`` — the cluster scheduler's full scheduling-epoch
+  program: the event clock and the per-node release heap live in the scan
+  carry, so when a queued attempt fits no node the program advances time to
+  the next release **in-program** and retries — no host round-trip per
+  blocked row.  Each node's demand timeline (sorted event instants + deltas,
+  seeded from ``Timeline.events()``) also lives in the carry; placements
+  splice their events in with the same ``side="right"`` tie order the host
+  ``Timeline`` uses, so the carry stays bit-identical to the profiles the
+  sequential oracle probes.
+
+All programs run in float64 (``nextafter`` switch events are below float32
+resolution at cluster/serving timestamps): callers hold one
+``jax.experimental.enable_x64`` context open across a hot loop; the host
+wrappers only enter one themselves when none is active.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import enable_compile_cache
+from repro.sim.traces import bucket_size
+
+enable_compile_cache()
+
+
+def pad_rows(a: np.ndarray, n: int, fill: float) -> np.ndarray:
+    """Pad axis 0 of ``a`` to ``n`` rows with ``fill`` (returns ``a``
+    unchanged when already that size)."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0], *a.shape[1:]), fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def _x64_ctx():
+    """An ``enable_x64`` context, or a no-op when one is already active."""
+    from jax.experimental import enable_x64
+
+    return contextlib.nullcontext() if jax.config.jax_enable_x64 else enable_x64()
+
+
+# ---------------------------------------------------------------------------
+# Shared per-(candidate, probe) demand pieces.
+# ---------------------------------------------------------------------------
+
+
+def candidate_probe_parts(P, starts, ends, rels, bnd, val, valext, sw, live, *, inclusive_end: bool):
+    """Per-candidate demand pieces at a shared probe set.
+
+    Args (C candidates, Pp probes, k segments; all float64 on device):
+      P: (Pp,) absolute probe instants, +inf padded.
+      starts/ends/rels: (C,) window starts, window ends, release instants.
+      bnd/val: (C, k) each candidate's boundaries / values.
+      valext: (C, k + 1) hold-last values.
+      sw/live: (C, k) absolute switch instants (``nextafter`` past each
+        boundary) and the fired-before-release mask.
+      inclusive_end: True probes the closed window [start, end] (admission's
+        Eq. 1 domain), False the right-open [start, end) (a cluster
+        reservation's occupancy window).
+
+    Returns (A, M, D), each (C, Pp):
+      A — the candidate's own allocation value at each probe,
+      M — probe-membership mask of the candidate's window,
+      D — the candidate's committed-profile demand contribution (its own
+          step value while live on [start, release)), i.e. what later
+          candidates must see once this one is admitted/placed.
+    """
+    k = bnd.shape[1]
+    offs = P[None, :, None] - starts[:, None, None]  # (C, Pp, 1)-broadcast offsets
+    idx = jnp.minimum(jnp.sum(bnd[:, None, :] < offs, axis=-1), k - 1)
+    A = jnp.take_along_axis(val, idx, axis=1)  # alloc.at(P - start)
+    below = (P[None, :] <= ends[:, None]) if inclusive_end else (P[None, :] < ends[:, None])
+    M = (P[None, :] >= starts[:, None]) & below & jnp.isfinite(P)[None, :]
+    # value after the switches that fired by P, live on [start, release)
+    nst = jnp.sum(live[:, None, :] & (sw[:, None, :] <= P[None, :, None]), axis=-1)
+    inwin = (P[None, :] >= starts[:, None]) & (P[None, :] < rels[:, None])
+    D = jnp.where(inwin, jnp.take_along_axis(valext, nst, axis=1), 0.0)
+    return A, M, D
+
+
+@functools.lru_cache(maxsize=None)
+def admission_program():
+    """The jitted batch-admission program (compiled per padded shape bucket).
+
+    Shapes: P/prof (Pp,) shared probe set and profile reads; per-candidate
+    starts/ends/rels/valid (Cp,); bnd/val/sw/live (Cp, k); valext (Cp, k+1).
+    Padding: P with +inf (masked by isfinite), candidates with
+    valid=False / start=+inf (their window and member masks are empty).
+
+    Per candidate the fit check is the scalar ``demand_exceeds`` with
+    ``inclusive_end=True``: max over every probe point in [start, end] of
+    profile + earlier-admitted-batch demand + own allocation, compared
+    strictly against the budget.  The probe set P is the deduped union
+    (``core.timeline.shared_probe_set``) of all profile events and every
+    candidate's start/switch instants, so it contains every point where
+    combined demand can rise inside any candidate's window — dropped
+    duplicates and extra in-window points only re-sample the step function
+    and cannot change the max.  A ``lax.scan`` threads the within-batch
+    dependency: an admitted candidate's demand (table-lookup of its own step
+    function, live on [start, release)) is added to the carry that later
+    candidates probe.
+    """
+
+    def run(P, prof, starts, ends, rels, bnd, val, valext, sw, live, valid, budget):
+        A, M, D = candidate_probe_parts(
+            P, starts, ends, rels, bnd, val, valext, sw, live, inclusive_end=True
+        )
+
+        def step(extra, row):
+            a, d, m, ok = row
+            admit = ok & ~jnp.any(m & (prof + extra + a > budget))
+            return extra + jnp.where(admit, d, 0.0), admit
+
+        _, admits = jax.lax.scan(step, jnp.zeros_like(P), (A, D, M, valid))
+        return admits
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# The streaming window program: first-fit for a window of rows that all
+# share the epoch clock (nobody waits).  The cheap common case — the probe
+# set and profile reads are precomputed host-side, so the program is a few
+# tiny (N, Pp) masked ops per row.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _window_program_shared(n_nodes: int):
+    """The jitted streaming-window program over ONE shared probe set.
+
+    The cheap variant when the union of probe instants across nodes is
+    small: per-candidate pieces (A/M/D) are precomputed once per call over
+    the shared (Pp,) axis by ``candidate_probe_parts``, so each scan step is
+    three fused (N, Pp) passes.  Decisions are identical to
+    ``_window_program_pernode`` — extra probes only re-sample step
+    functions — the host picks whichever costs less for the call's shapes.
+    """
+
+    def run(P, prof, now, ends, rels, bnd, val, valid, cap):
+        # Derive the per-row pieces on device (fewer host arrays per call):
+        # all candidates share the epoch clock, switch instants are the same
+        # ``nextafter`` the host used building P, and a cluster reservation
+        # releases at its occupancy end (``rels``) while the fit window runs
+        # to the full predicted duration (``ends``).
+        starts = jnp.where(valid, now, jnp.inf)
+        sw = jnp.nextafter(now + bnd, jnp.inf)
+        live = jnp.isfinite(bnd) & (now + bnd < rels[:, None])
+        valext = jnp.concatenate([val, val[:, -1:]], axis=1)
+        A, M, D = candidate_probe_parts(
+            P, starts, ends, rels, bnd, val, valext, sw, live, inclusive_end=False
+        )
+        node_ids = jnp.arange(n_nodes)
+
+        def step(carry, row):
+            extra, blocked = carry  # extra: (N, Pp) this epoch's placed demand
+            a, d, m, ok = row
+            over = jnp.any(m[None, :] & (prof + extra + a[None, :] > cap), axis=-1)  # (N,)
+            fit = ~over
+            can = ok & ~blocked & jnp.any(fit)
+            node = jnp.argmax(fit)  # first-fit: lowest fitting node index
+            extra = extra + jnp.where((can & (node_ids == node))[:, None], d[None, :], 0.0)
+            return (extra, blocked | (ok & ~can)), (can, node)
+
+        init = (jnp.zeros_like(prof), jnp.asarray(False))
+        # unroll: the step body is a handful of small (N, Pp) vector ops, so
+        # the while-loop bookkeeping dominates on CPU without it
+        _, (placed, node) = jax.lax.scan(step, init, (A, D, M, valid), unroll=8)
+        return placed, node
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _window_program_pernode(n_nodes: int):
+    """The jitted streaming-window program (per padded shape bucket).
+
+    One call decides the whole (candidate x node) first-fit matrix for a
+    window of queued attempt rows sharing the epoch clock: per candidate the
+    fit check is the scalar ``NodeState.fits`` — any probe in the right-open
+    fit window where node profile + earlier in-window placements + own
+    allocation exceeds capacity(+eps) — evaluated against every node at
+    once, with first-fit the lowest fitting node index.  A ``lax.scan``
+    threads within-epoch sequencing: a placed candidate's demand is added to
+    its node's carry, exactly as if the host had committed it before probing
+    the next candidate (the ``BatchedAdmissionController`` pattern).  The
+    first candidate that fits nowhere blocks every later one (it must wait —
+    ``schedule_epoch`` takes over), so ``placed`` is always a prefix.
+
+    Probes are **per node** — each node's own profile events plus the probe
+    instants every candidate shares (the clock and all switch instants), so
+    the padded probe axis is sized by one node's events, not the union
+    across the cluster.  Candidate values and committed demand at the probes
+    unroll into k fused passes over (N, Pp): for values via the monotone
+    comparison trick (exists j <= #(b < off) with demand + v_j > cap —
+    rounding is monotone in the addend, so the decision is bit-equal to
+    reading v[#(b < off)]); for committed demand via the step-delta sum
+    (v_0 + fired step deltas — the same deltas the host ``Timeline``
+    accumulates).
+    """
+
+    def run(P, prof, now, ends, rels, bnd, val, valid, cap):
+        # all candidates share the epoch clock; every probe is at or after
+        # it (the host builds P from the clock, switch instants past it and
+        # strictly-future node events), so window membership per row is just
+        # "before this row's end"
+        off = P - now  # (N, Pp) candidate-relative offsets
+        fin = jnp.isfinite(P)
+        sw = jnp.nextafter(now + bnd, jnp.inf)  # (W, k)
+        live = jnp.isfinite(bnd) & (now + bnd < rels[:, None])
+        steps = jnp.concatenate([jnp.diff(val, axis=1), jnp.zeros_like(val[:, :1])], axis=1)
+        k = bnd.shape[1]
+
+        def step(carry, row):
+            S, blocked = carry  # S: (N, Pp) profile + this epoch's placed demand
+            b, v, sw_r, live_r, st_r, end, rel, ok = row
+            m = fin & (P < end)  # right-open fit window
+            over = jnp.any(m & (S + v[0] > cap), axis=-1)  # (N,)
+            for j in range(1, k):
+                over |= jnp.any(m & (off > b[j - 1]) & (S + v[j] > cap), axis=-1)
+            fit = ~over
+            can = ok & ~blocked & jnp.any(fit)
+            node = jnp.argmax(fit)  # first-fit: lowest fitting node index
+            # committed demand at the placed node's probes only (1, Pp): the
+            # value after the fired switches, live on [now, release)
+            Pn = P[node]
+            inwin = jnp.isfinite(Pn) & (Pn < rel)
+            d = inwin * v[0]
+            for j in range(k):
+                d = d + jnp.where(inwin & live_r[j] & (sw_r[j] <= Pn), st_r[j], 0.0)
+            S = S.at[node].add(jnp.where(can, d, 0.0))
+            return (S, blocked | (ok & ~can)), (can, node)
+
+        init = (prof, jnp.asarray(False))
+        # unroll: the step body is a handful of small (N, Pp) vector ops, so
+        # the while-loop bookkeeping dominates on CPU without it
+        _, (placed, node) = jax.lax.scan(
+            step, init, (bnd, val, sw, live, steps, ends, rels, valid), unroll=8
+        )
+        return placed, node
+
+    return jax.jit(run)
+
+
+def first_fit_window(
+    now: float,
+    bnd: np.ndarray,
+    val: np.ndarray,
+    run_times: np.ndarray,
+    probe_times: np.ndarray,
+    profiles: list[tuple[np.ndarray, np.ndarray]],
+    capacity_budget: float,
+    window_bucket: int = 32,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Decide first-fit placements for one window of rows at a fixed clock.
+
+    Args:
+      now: the epoch clock — every candidate's start.
+      bnd/val: (w, k) the rows' allocation schedules (already node-capped).
+      run_times: (w,) occupancy durations (release instants); probe_times:
+        (w,) fit-window durations (the full predicted duration).
+      profiles: per node, the cached ``(event times, cumulative demand)``
+        arrays of its ``Timeline`` (``NodeState.profile_arrays``).
+      capacity_budget: the fits budget (capacity + eps, as ``NodeState.fits``).
+      window_bucket: rows are padded to this static size.
+
+    Probes are the instants where combined step demand can rise: the clock,
+    every candidate's switch instants, and profile events inside the widest
+    fit window, always deduped (``core.timeline.shared_probe_set`` — switch
+    instants and dyadic completion times repeat heavily, so the sorted
+    unique union often drops the padded probe bucket a power of two).  Two
+    exact, decision-identical program variants share the work differently:
+
+    * **shared** — one probe union across nodes; per-candidate pieces
+      precomputed once per call (cheap when the union stays small).
+    * **per-node** — each node probes only its OWN events (+ the shared
+      candidate switches), with the candidate pieces unrolled into k fused
+      passes; cheap when cluster-wide events would blow the shared union up.
+
+    The host estimates both costs from the probe counts and dispatches the
+    cheaper one.  Profile reads happen host-side (numpy ``searchsorted``
+    against each node's cached cumulative profile, the same expression the
+    scalar path uses); the programs only probe, sequence and pick nodes.
+    Returns ``(placed, node)``; ``placed`` is a prefix.
+    """
+    from repro.core.timeline import shared_probe_set
+
+    w, k = bnd.shape
+    N = len(profiles)
+    ends = now + probe_times
+    rels = now + run_times
+    sw = np.nextafter(now + bnd, np.inf)  # switch instants (right-open steps)
+    tmax = float(ends.max())
+    csw = shared_probe_set(np.asarray([now]), sw[np.isfinite(sw)])
+    evs = [t[(t > now) & (t < tmax)] for t, _ in profiles]
+    Wb = int(window_bucket)
+    n_shared = len(csw) + sum(len(e) for e in evs)  # upper bound pre-dedup
+    n_pernode = len(csw) + max((len(e) for e in evs), default=0)
+    # per-step cost ~ Pp*(k + 3N) shared vs Pp'*(2k+2)*N per-node
+    use_shared = n_shared * (k + 3 * N) <= n_pernode * (2 * k + 2) * N
+    if use_shared:
+        P = shared_probe_set(csw, *evs)
+        Pp = bucket_size(len(P), floor=128)
+        prof = np.zeros((N, Pp))
+        for n, (t, c) in enumerate(profiles):
+            prof[n, : len(P)] = c[np.searchsorted(t, P, side="right")]
+        P = np.concatenate([P, np.full(Pp - len(P), np.inf)])
+        program = _window_program_shared(N)
+    else:
+        pns = [shared_probe_set(csw, e) for e in evs]
+        Pp = bucket_size(max(len(p) for p in pns), floor=128)
+        P = np.full((N, Pp), np.inf)
+        prof = np.zeros((N, Pp))
+        for n, ((t, c), pn) in enumerate(zip(profiles, pns)):
+            P[n, : len(pn)] = pn
+            prof[n, : len(pn)] = c[np.searchsorted(t, pn, side="right")]
+        program = _window_program_pernode(N)
+    args = (
+        P,
+        prof,
+        float(now),
+        pad_rows(ends, Wb, -np.inf),
+        pad_rows(rels, Wb, -np.inf),
+        pad_rows(bnd, Wb, np.inf),
+        pad_rows(val, Wb, 0.0),
+        pad_rows(np.ones(w, dtype=bool), Wb, False),
+    )
+    with _x64_ctx():
+        placed, node = program(*args, np.float64(capacity_budget))
+    return np.asarray(placed)[:w], np.asarray(node)[:w]
+
+
+# ---------------------------------------------------------------------------
+# The scheduling-epoch program: first-fit placement with the event clock and
+# release heap in the carry.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _schedule_program(tl_t, tl_d, base0, ev, h0, now0, bnd, val, run, pdur, valid, budget):
+    """One scheduling epoch on device (shapes fix the compiled variant).
+
+    Args:
+      tl_t/tl_d: (N, L) per-node event times (sorted, +inf padded) and
+        demand deltas (0 padded) — ``Timeline.events()`` seeded.  Only
+        events after the epoch clock are carried; ``base0`` (N,) is each
+        node's cumulative demand at the clock (the folded prefix — every
+        probe is at or after the clock, so earlier events only ever enter
+        through this sum).
+      ev: (H,) pending completion instants (+inf padded, +inf = free slot).
+      h0: number of real entries in ``ev`` (placements push at ``h0 + row``).
+      now0: the epoch's starting clock.
+      bnd/val: (W, k) candidate allocation schedules (inf-padded rows are
+        the k = 1 baselines, which hold their value anyway).
+      run: (W,) occupancy durations (a failed attempt holds its node only
+        up to the kill); pdur: (W,) fit-check window durations (the
+        scheduler probes the full predicted duration — it cannot know an
+        attempt will die early); valid: (W,) real-row mask.
+      budget: the fits budget (capacity + eps, as ``NodeState.fits``).
+
+    A ``lax.scan`` walks the rows in queue order.  Per row, a bounded
+    ``while_loop`` mirrors the sequential oracle's ``_find_slot``: probe
+    every node at the current clock (the scalar ``demand_exceeds``
+    expressions, evaluated against the carried timelines); when no node
+    fits, pop the earliest pending completion, advance the clock to it and
+    re-probe.  A placed row's events are spliced into its node's carried
+    timeline (``side="right"`` tie order, identical to the host
+    ``Timeline``) and its completion pushed onto the heap, so later rows
+    see it both as demand and as a wait target.  If the heap drains with no
+    fit (unreachable for node-capped allocations), the row and everything
+    after it return unplaced and the host takes over.
+
+    Returns (placed, node, start) per row plus (final clock, events popped,
+    rows that waited).  ``placed`` is always a prefix of the valid rows.
+    """
+    N, L = tl_t.shape
+    W, k = bnd.shape
+    CH = 8  # pending completions probed per wait iteration
+    # Per-node in-epoch commit cap: bounds the timeline axis the host must
+    # pad for (L = future events + CAP * (k + 2)).  A row whose first-fit
+    # node has a full commit buffer aborts the epoch — its pops and clock
+    # advance are DISCARDED so the host re-dispatch replays the row
+    # identically against freshly folded timelines.  At the driver's wait
+    # window (8 rows) the cap equals the window, so an abort is impossible;
+    # it only guards larger callers.
+    CAP = max(2, min(W, 8))
+
+    def row_step(carry, x):
+        now, tl_t, tl_d, ev, pops, waited, blocked, cnts, dead_any = carry
+        b, v, dur, pd, ok, ridx = x
+        # The profile is frozen while a row waits (nothing commits until it
+        # places), so the running sums are computed once per row.
+        cs = base0[:, None] + jnp.cumsum(tl_d, axis=1)  # demand after event i (N, L)
+        cs0 = jnp.concatenate([base0[:, None], cs], axis=1)
+        # positions that are last in their tie group: probes must read the
+        # sum after ALL events tied at an instant, never a partial mid-tie
+        # sum (inf padding compares equal to itself and is masked out).
+        tie_last = jnp.concatenate(
+            [tl_t[:, :-1] != tl_t[:, 1:], jnp.isfinite(tl_t[:, -1:])], axis=1
+        )
+
+        def fit_many(cc):
+            """(C, N) fit masks of the row at clocks ``cc`` (C,) — the exact
+            probe expressions of the scalar ``demand_exceeds`` over the
+            full-duration window [c, c + pdur), every clock at once."""
+            C = cc.shape[0]
+            end = cc + pd  # (C,)
+            dur_eff = end - cc  # the scalar's ``end - start`` (not ``pd``)
+            p_sw = jnp.nextafter(cc[:, None] + b[None, :], jnp.inf)  # (C, k)
+            own_p = jnp.concatenate([cc[:, None], p_sw], axis=1)  # (C, k+1)
+            own_ok = jnp.concatenate(
+                [jnp.ones((C, 1), bool), (b[None, :] < dur_eff[:, None]) & (p_sw < end[:, None])],
+                axis=1,
+            )
+            offs = own_p - cc[:, None]
+            oidx = jnp.minimum(jnp.sum(b[None, None, :] < offs[:, :, None], axis=2), k - 1)
+            cand_own = v[oidx]  # alloc.at at own probes (C, k+1)
+            flat_p = own_p.reshape(-1)  # (C*(k+1),)
+            cnt = jnp.sum(tl_t[:, None, :] <= flat_p[None, :, None], axis=2)  # (N, C*(k+1))
+            prof_own = jnp.take_along_axis(cs0, cnt, axis=1).reshape(N, C, k + 1)
+            over = jnp.any(
+                own_ok[None, :, :] & (prof_own + cand_own[None, :, :] > budget), axis=2
+            )  # (N, C)
+            # profile events strictly inside each right-open window.  The
+            # candidate's value at an event offset is v[#(b < off)] with v
+            # non-decreasing, so "demand + value-at-offset exceeds" unrolls
+            # into k fused passes — exists j <= #(b < off) with cs + v_j >
+            # budget (float-safe: rounding is monotone in the addend) —
+            # avoiding the (N, C, L) index gather.
+            m_ev = (tl_t[:, None, :] > cc[None, :, None]) & (tl_t[:, None, :] < end[None, :, None])
+            m_ev &= tie_last[:, None, :]
+            eoffs = tl_t[:, None, :] - cc[None, :, None]  # (N, C, L)
+            over_ev = jnp.any(m_ev & (cs[:, None, :] + v[0] > budget), axis=2)
+            for j in range(1, k):
+                over_ev |= jnp.any(
+                    m_ev & (eoffs > b[j - 1]) & (cs[:, None, :] + v[j] > budget), axis=2
+                )
+            return ~(over | over_ev).T  # (C, N)
+
+        fit0 = fit_many(now[None])[0]  # (N,)
+        found0 = jnp.any(fit0)
+        node0 = jnp.argmax(fit0).astype(jnp.int32)  # first-fit: lowest index
+
+        def wcond(s):
+            _, _, _, found, _, dead = s
+            return ok & ~blocked & ~found & ~dead
+
+        def wbody(s):
+            t, ev_, p_, _, _, _ = s
+            # pop up to CH earliest pending completions in one probe: the
+            # oracle pops one event, re-probes, pops the next ... — the
+            # chunk evaluates those same probes (each at max(now, t_i))
+            # together and consumes exactly the events the oracle would
+            neg, idx = jax.lax.top_k(-ev_, CH)  # CH smallest times, ascending
+            tt = -neg
+            fin = jnp.isfinite(tt)
+            cc = jnp.maximum(t, tt)
+            F = fit_many(jnp.where(fin, cc, t)) & fin[:, None]  # (CH, N)
+            anyfit = jnp.any(F, axis=1)
+            hit = jnp.any(anyfit)
+            i = jnp.argmax(anyfit)
+            npop = jnp.where(hit, i + 1, jnp.sum(fin)).astype(jnp.int32)
+            ev2 = ev_.at[idx].set(jnp.where(jnp.arange(CH) < npop, jnp.inf, tt))
+            last = jnp.maximum(npop - 1, 0)
+            t2 = jnp.where(hit, cc[i], jnp.where(npop > 0, cc[last], t))
+            node2 = jnp.argmax(F[i]).astype(jnp.int32)
+            return (t2, ev2, p_ + npop, hit, node2, ~hit & (npop == 0))
+
+        init = (now, ev, jnp.zeros((), jnp.int32), found0, node0, jnp.asarray(False))
+        t_f, ev_f, row_pops, found, node, dead = jax.lax.while_loop(wcond, wbody, init)
+        ran = ok & ~blocked
+        full = cnts[node] >= CAP
+        placed = found & ran & ~full
+        aborted = found & ran & full
+
+        def commit(args):
+            tl_t, tl_d, ev_ = args
+            end = t_f + dur
+            # the row's ~k+2 timeline events, exactly plan_profile_events'
+            sw = jnp.nextafter(t_f + b, jnp.inf)
+            live = jnp.isfinite(b) & (t_f + b < end)
+            steps = jnp.concatenate([jnp.diff(v), jnp.zeros((1,), v.dtype)])
+            vext = jnp.concatenate([v, v[-1:]])
+            v_end = vext[jnp.sum(live)]
+            t_new = jnp.concatenate([t_f[None], jnp.where(live, sw, jnp.inf), end[None]])
+            d_new = jnp.concatenate([v[:1], jnp.where(live, steps, 0.0), -v_end[None]])
+            order = jnp.argsort(t_new, stable=True)  # keeps host event order on ties
+            t_new, d_new = t_new[order], d_new[order]
+            # splice into the node's sorted timeline, side="right": new
+            # events after existing ties, dead (+inf) slots dropped
+            # (compare-counts instead of searchsorted: its scan lowering is
+            # a sequential loop, the counts are one vectorized op)
+            tn, dn = tl_t[node], tl_d[node]
+            pos_new = jnp.sum(tn[None, :] <= t_new[:, None], axis=1) + jnp.arange(k + 2)
+            old_tgt = jnp.arange(L) + jnp.sum(t_new[None, :] < tn[:, None], axis=1)
+            t2 = (
+                jnp.full((L,), jnp.inf, tn.dtype)
+                .at[old_tgt].set(tn, mode="drop")
+                .at[pos_new].set(t_new, mode="drop")
+            )
+            d2 = (
+                jnp.zeros((L,), dn.dtype)
+                .at[old_tgt].set(dn, mode="drop")
+                .at[pos_new].set(d_new, mode="drop")
+            )
+            return tl_t.at[node].set(t2), tl_d.at[node].set(d2), ev_.at[h0 + ridx].set(end)
+
+        tl_t2, tl_d2, ev2 = jax.lax.cond(placed, commit, lambda a: a, (tl_t, tl_d, ev_f))
+        # an aborted row's pops, clock advance and heap state are discarded
+        # (the re-dispatch replays it); a dead row keeps them — the oracle
+        # consumed those events before discovering the heap was dry
+        keep = placed | (ran & ~found)
+        carry = (
+            jnp.where(keep, t_f, now),
+            tl_t2,
+            tl_d2,
+            jnp.where(keep, ev2, ev),
+            pops + jnp.where(aborted, 0, row_pops),
+            waited + (placed & (row_pops > 0)).astype(jnp.int32),
+            blocked | (ok & ~placed),
+            cnts.at[node].add(placed.astype(jnp.int32)),
+            dead_any | (ran & dead),
+        )
+        return carry, (placed, node, t_f)
+
+    xs = (bnd, val, run, pdur, valid, jnp.arange(W, dtype=jnp.int32))
+    init = (
+        now0,
+        tl_t,
+        tl_d,
+        ev,
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.asarray(False),
+        jnp.zeros((N,), jnp.int32),
+        jnp.asarray(False),
+    )
+    (now_f, _, _, _, pops, waited, _, _, dead_any), (placed, node, start) = jax.lax.scan(
+        row_step, init, xs
+    )
+    return placed, node, start, now_f, pops, waited, dead_any
+
+
+def schedule_epoch(
+    now: float,
+    bnd: np.ndarray,
+    val: np.ndarray,
+    run_times: np.ndarray,
+    node_events: list[tuple[np.ndarray, np.ndarray]],
+    pending: np.ndarray,
+    capacity_budget: float,
+    window_bucket: int = 32,
+    probe_times: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, float, int, int, bool]:
+    """Place up to one window of attempt rows, resolving waits in-program.
+
+    Args:
+      now: the scheduling clock at epoch start.
+      bnd/val: (w, k) the rows' allocation schedules (already node-capped).
+      run_times: (w,) each row's occupancy duration.
+      node_events: per node, ``Timeline.events()`` — the sorted event times
+        and demand deltas of its reservation profile.
+      pending: (E,) completion instants still in the scheduler's wait heap.
+      capacity_budget: the fits budget (capacity + eps, as ``NodeState.fits``).
+      window_bucket: rows are padded to this static size; timeline/heap axes
+        are bucketed so compiled shapes stay bounded.
+      probe_times: (w,) fit-check window durations — the full predicted
+        duration when occupancy is kill-truncated (defaults to
+        ``run_times``: probe what you occupy).
+
+    Returns ``(placed, node, start, now_final, n_pops, n_waited, dead)``
+    for the w real rows: ``placed`` is a prefix — False past the first row
+    that aborted on a full per-node commit buffer (the caller re-dispatches;
+    nothing about the row was consumed) or, with ``dead`` True, past a row
+    that drained the heap with no fit (unreachable for capped allocations;
+    the caller falls back to the oracle's +1.0 clock walk).  ``start`` is
+    each placed row's clock; ``n_pops`` pending events were consumed (the
+    n_pops smallest of ``pending`` + this epoch's own completions — pop
+    order among time-ties is unobservable); ``n_waited`` rows waited
+    in-program.
+    """
+    w, k = bnd.shape
+    Wb = int(window_bucket)
+    N = len(node_events)
+    # Fold each node's events at or before the clock into a scalar base
+    # demand: every probe the program evaluates is at or after ``now``, so
+    # the prefix only ever enters as its cumulative sum — carrying it as a
+    # scalar keeps the padded timeline axis sized by *future* events.  The
+    # base is the sequential ``np.cumsum`` prefix, the same value the host
+    # profile's ``arrays()`` reads at the clock (``np.sum`` would not do:
+    # its pairwise accumulation rounds differently past ~128 elements).
+    cuts = [np.searchsorted(t, now, side="right") for t, _ in node_events]
+    base0 = np.asarray(
+        [np.cumsum(d[:c])[-1] if c else 0.0 for (_, d), c in zip(node_events, cuts)]
+    )
+    e0 = max((len(t) - c for (t, _), c in zip(node_events, cuts)), default=0)
+    # capacity for one node's in-epoch commits (the program's CAP; beyond it
+    # the epoch aborts and the host re-dispatches with fresh timelines)
+    L = bucket_size(e0 + max(2, min(Wb, 8)) * (k + 2), floor=64)
+    tl_t = np.full((N, L), np.inf)
+    tl_d = np.zeros((N, L))
+    for n, ((t, d), c) in enumerate(zip(node_events, cuts)):
+        tl_t[n, : len(t) - c] = t[c:]
+        tl_d[n, : len(d) - c] = d[c:]
+    h0 = len(pending)
+    H = bucket_size(h0 + Wb, floor=32)
+    ev = np.full(H, np.inf)
+    ev[:h0] = np.sort(np.asarray(pending, dtype=np.float64))
+    if probe_times is None:
+        probe_times = run_times
+    args = (
+        tl_t,
+        tl_d,
+        base0,
+        ev,
+        np.int32(h0),
+        np.float64(now),
+        pad_rows(np.asarray(bnd, dtype=np.float64), Wb, np.inf),
+        pad_rows(np.asarray(val, dtype=np.float64), Wb, 0.0),
+        pad_rows(np.asarray(run_times, dtype=np.float64), Wb, 0.0),
+        pad_rows(np.asarray(probe_times, dtype=np.float64), Wb, 0.0),
+        pad_rows(np.ones(w, dtype=bool), Wb, False),
+        np.float64(capacity_budget),
+    )
+    with _x64_ctx():
+        placed, node, start, now_f, pops, waited, dead = _schedule_program(*args)
+        return (
+            np.asarray(placed)[:w],
+            np.asarray(node, dtype=np.int64)[:w],
+            np.asarray(start, dtype=np.float64)[:w],
+            float(now_f),
+            int(pops),
+            int(waited),
+            bool(dead),
+        )

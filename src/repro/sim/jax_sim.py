@@ -63,11 +63,14 @@ def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval
     live segments.  Segments beyond ``k_eff`` are replicas of the last real
     one (their stats learned replicated peaks, see segment_peaks_dynamic) and
     get +inf boundaries, so they act as the hold-last-value overflow region.
+    Arithmetic runs in the stats' dtype (float32, or float64 for the x64
+    ladder variant).
     """
+    dt = rt_stats.dtype
     r_e = regression.predict(rt_stats, u) - jnp.maximum(rt_over, 0.0)
     r_e = jnp.maximum(r_e, interval_s)
     s = jnp.arange(k)
-    bounds = (s + 1).astype(jnp.float32) * (r_e / k_eff.astype(jnp.float32))
+    bounds = (s + 1).astype(dt) * (r_e / k_eff.astype(dt))
     bounds = jnp.where(s == k_eff - 1, r_e, bounds)  # exact last edge, as the Python model
     bounds = jnp.where(s >= k_eff, jnp.inf, bounds)
     v = regression.predict(seg_stats, u) + jnp.maximum(seg_under, 0.0)
@@ -79,7 +82,7 @@ def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval
 def _attempt(y, length, interval_s, bounds, values):
     """Single-row attempt scorer (same semantics as core.allocation)."""
     T = y.shape[0]
-    t = (jnp.arange(T, dtype=jnp.float32) + 0.5) * interval_s
+    t = (jnp.arange(T, dtype=y.dtype) + 0.5) * interval_s
     idx = jnp.minimum(jnp.sum(t[:, None] > bounds[None, :], axis=1), len(values) - 1)
     a = values[idx]
     valid = jnp.arange(T) < length
@@ -133,7 +136,7 @@ def _replay_multi(
             wbuf = wbuf.at[rows, att].set(jnp.where(active, w, wbuf[rows, att]))
             natt = natt + active.astype(jnp.int32)
             rec = (vbuf, fbuf, wbuf, natt)
-        t_fail = (fail_idx.astype(jnp.float32) + 0.5) * interval_s
+        t_fail = (fail_idx.astype(bounds.dtype) + 0.5) * interval_s
         seg = jnp.minimum(jnp.sum(t_fail[:, None] > bounds, axis=1), k_eff - 1)  # (M,)
         bump_sel = vals * jnp.where(seg_pos == seg[:, None], factor, 1.0)
         bump_par = jnp.where(seg_pos >= seg[:, None], vals * factor, vals)
@@ -150,9 +153,9 @@ def _replay_multi(
     rec0 = ()
     if record:
         rec0 = (
-            jnp.zeros((M, max_attempts, k), jnp.float32),
+            jnp.zeros((M, max_attempts, k), values.dtype),
             jnp.full((M, max_attempts), -1, jnp.int32),
-            jnp.zeros((M, max_attempts), jnp.float32),
+            jnp.zeros((M, max_attempts), values.dtype),
             jnp.zeros((M,), jnp.int32),
         )
     _, retries, waste, _, rec = jax.lax.while_loop(
@@ -161,7 +164,7 @@ def _replay_multi(
         (
             jnp.zeros((M,), bool),
             jnp.zeros((M,), jnp.int32),
-            jnp.zeros((M,), jnp.float32),
+            jnp.zeros((M,), values.dtype),
             jnp.minimum(values, cap_mib),
             rec0,
         ),
@@ -187,12 +190,13 @@ def _witt_prefix_values(u, gpeak, floor_mib):
     recomputes per prediction, here built once for all steps.
     """
     B = u.shape[0]
-    upd = regression.update_stats(jnp.zeros((B, regression.NUM_STATS), jnp.float32), u, gpeak)
-    pref = jnp.concatenate([jnp.zeros((1, regression.NUM_STATS), jnp.float32), jnp.cumsum(upd, axis=0)[:-1]], axis=0)
+    dt = u.dtype
+    upd = regression.update_stats(jnp.zeros((B, regression.NUM_STATS), dt), u, gpeak)
+    pref = jnp.concatenate([jnp.zeros((1, regression.NUM_STATS), dt), jnp.cumsum(upd, axis=0)[:-1]], axis=0)
     intercept, slope = regression.fit(pref)  # (B,) step-i fits
     e = gpeak[None, :] - intercept[:, None] - slope[:, None] * u[None, :]  # (B, B)
     seen = jnp.arange(B)[None, :] < jnp.arange(B)[:, None]
-    n = jnp.maximum(jnp.sum(seen, axis=1), 1).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(seen, axis=1), 1).astype(dt)
     mean = jnp.sum(jnp.where(seen, e, 0.0), axis=1) / n
     var = jnp.sum(jnp.where(seen, e * e, 0.0), axis=1) / n - mean * mean
     std = jnp.where(jnp.arange(B) >= 2, jnp.sqrt(jnp.maximum(var, 0.0)), 0.0)  # Witt: >= 2 residuals
@@ -218,11 +222,12 @@ def _ppm_prefix_values(gpeak, rt_samples, cap_mib, floor_mib):
     Returns (val_orig, val_improved): (B,) allocation values.
     """
     B = gpeak.shape[0]
+    dt = gpeak.dtype
     order = jnp.argsort(gpeak)
     p = gpeak[order]  # sorted candidate/peak values
     rt = rt_samples[order]
     seen = order[None, :] < jnp.arange(B)[:, None]  # (B_steps, B_sorted)
-    seen_f = seen.astype(jnp.float32)
+    seen_f = seen.astype(dt)
     C = jnp.cumsum(seen_f * rt[None, :], axis=1)  # masked prefix runtime sums
     S = jnp.cumsum(seen_f * (p * rt)[None, :], axis=1)
     waste_ok = p[None, :] * C - S  # successes: (q - p_i) * rt_i
@@ -241,7 +246,7 @@ def _ppm_prefix_values(gpeak, rt_samples, cap_mib, floor_mib):
     # an exclusive cumsum of columns gathered into execution order — O(B^2).
     contrib = w_pair[:, jnp.argsort(order)].T  # (B_exec, B_cand)
     waste_imp = waste_ok + jnp.concatenate(
-        [jnp.zeros((1, B), jnp.float32), jnp.cumsum(contrib, axis=0)[:-1]], axis=0
+        [jnp.zeros((1, B), dt), jnp.cumsum(contrib, axis=0)[:-1]], axis=0
     )
     val_orig = p[jnp.argmin(jnp.where(seen, waste_orig, jnp.inf), axis=1)]
     val_imp = p[jnp.argmin(jnp.where(seen, waste_imp, jnp.inf), axis=1)]
@@ -267,26 +272,29 @@ def _simulate_methods(
     floor_mib: float = 100.0,
     cap_mib: float = 128 * 1024.0,
     max_attempts: int | None = None,
+    dtype=jnp.float32,
 ):
     """Shared body of the multi-method engines (see the jitted entry points
-    ``simulate_task_methods`` and ``simulate_task_ladders``)."""
+    ``simulate_task_methods`` and ``simulate_task_ladders``).  ``dtype`` is
+    the working precision: float32 (default), or float64 for the x64 ladder
+    variant (callers must hold an ``enable_x64`` context)."""
     B, T = y.shape
-    y = y.astype(jnp.float32)
+    y = y.astype(dtype)
     lengths = jnp.asarray(lengths, jnp.int32)
-    u = (x - x[0]).astype(jnp.float32)  # conditioning shift (see regression.py)
-    default_mib = jnp.asarray(default_mib, jnp.float32)
+    u = (x - x[0]).astype(dtype)  # conditioning shift (see regression.py)
+    default_mib = jnp.asarray(default_mib, dtype)
     k_eff = jnp.asarray(k if k_eff is None else k_eff, jnp.int32)
 
     peaks_all = segment_peaks_dynamic(y, lengths, k_eff, k)  # (B, k) — the segmax kernel's job
     gpeak = jnp.max(jnp.where(jnp.arange(T)[None, :] < lengths[:, None], y, 0.0), axis=1)
 
     need = set(methods)
-    zeros = jnp.zeros((B,), jnp.float32)
+    zeros = jnp.zeros((B,), dtype)
     witt_std, witt_max = (
         _witt_prefix_values(u, gpeak, floor_mib) if need & {"witt-lr", "witt-lr-max"} else (zeros, zeros)
     )
     ppm_orig, ppm_imp = (
-        _ppm_prefix_values(gpeak, lengths.astype(jnp.float32), cap_mib, floor_mib)
+        _ppm_prefix_values(gpeak, lengths.astype(dtype), cap_mib, floor_mib)
         if need & {"ppm", "ppm-improved"}
         else (zeros, zeros)
     )
@@ -294,8 +302,8 @@ def _simulate_methods(
     selective, cap_jump = retry_flags(methods)
     sel_flags = jnp.asarray(selective)
     cap_flags = jnp.asarray(cap_jump)
-    inf_bounds = jnp.full((k,), jnp.inf, jnp.float32)
-    ones_k = jnp.ones((k,), jnp.float32)
+    inf_bounds = jnp.full((k,), jnp.inf, dtype)
+    ones_k = jnp.ones((k,), dtype)
     need_ks = bool(need & {"ksegments-selective", "ksegments-partial"})
 
     def step(carry, inp):
@@ -340,7 +348,7 @@ def _simulate_methods(
             out = (waste, retries, bounds_m, vbuf, fbuf, wbuf, natt)
 
         # observe (progressive offsets: score-then-update)
-        runtime = li.astype(jnp.float32) * interval_s
+        runtime = li.astype(dtype) * interval_s
         has_data = rt_stats[regression.N] > 0
         rt_pred = regression.predict(rt_stats, ui)
         rt_over = jnp.where(has_data, jnp.maximum(rt_over, rt_pred - runtime), rt_over)
@@ -351,10 +359,10 @@ def _simulate_methods(
         return (rt_stats, rt_over, seg_stats, seg_under, i + 1), out
 
     init = (
-        regression.empty_stats(),
-        jnp.asarray(0.0, jnp.float32),
-        regression.empty_stats(k),
-        jnp.zeros((k,), jnp.float32),
+        regression.empty_stats(dtype=dtype),
+        jnp.asarray(0.0, dtype),
+        regression.empty_stats(k, dtype=dtype),
+        jnp.zeros((k,), dtype),
         jnp.asarray(0, jnp.int32),
     )
     per_step_vals = {"witt-lr": witt_std, "witt-lr-max": witt_max, "ppm": ppm_orig, "ppm-improved": ppm_imp}
@@ -411,7 +419,7 @@ def simulate_task_methods(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib", "max_attempts"),
+    static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib", "max_attempts", "x64"),
 )
 def simulate_task_ladders(
     x,
@@ -427,6 +435,7 @@ def simulate_task_ladders(
     floor_mib: float = 100.0,
     cap_mib: float = 128 * 1024.0,
     max_attempts: int = 32,
+    x64: bool = False,
 ):
     """The cluster scheduler's device program: the same online scan as
     ``simulate_task_methods``, but returning every execution's full retry
@@ -446,6 +455,11 @@ def simulate_task_ladders(
     about them depends on placement (predictions see only completed earlier
     executions of the same task type — identical to the sequential
     ``run_cluster`` protocol).
+
+    ``x64=True`` runs the whole scan in float64 (the caller must hold an
+    ``jax.experimental.enable_x64`` context): closes the rare ulp-boundary
+    gap where a float32 prediction flips a capacity comparison against the
+    float64 numpy oracle, at ~1.5x ladder cost.
     """
     _, _, bounds, vbuf, fbuf, wbuf, natt = _simulate_methods(
         x,
@@ -460,6 +474,7 @@ def simulate_task_ladders(
         floor_mib=floor_mib,
         cap_mib=cap_mib,
         max_attempts=max_attempts,
+        dtype=jnp.float64 if x64 else jnp.float32,
     )
     return {
         "boundaries": bounds.transpose(1, 0, 2),  # (M, B, k)

@@ -58,16 +58,18 @@ NODE_MIB = 128 * 1024.0
 # ---------------------------------------------------------------------------
 
 
-def _scalar_place_rows(bnd_rows, val_rows, run_rows, n_nodes):
+def _scalar_place_rows(bnd_rows, val_rows, run_rows, probe_rows, n_nodes):
     """Reference placement of flat attempt rows via the oracle's scalar
-    ``_find_slot`` + ``NodeState`` loop."""
+    ``_find_slot`` + ``NodeState`` loop: fit-check the full predicted
+    duration (the scheduler cannot know an attempt will die early), occupy
+    the kill-truncated run time — exactly ``run_cluster``'s semantics."""
     nodes = [NodeState(NODE_MIB) for _ in range(n_nodes)]
     events: list = []
     now = 0.0
     out = []
     for r in range(len(run_rows)):
         alloc = StepAllocation(bnd_rows[r], val_rows[r])
-        placed, now = _find_slot(nodes, events, now, alloc, float(run_rows[r]))
+        placed, now = _find_slot(nodes, events, now, alloc, float(probe_rows[r]))
         end = now + float(run_rows[r])
         nodes[placed].add(end, alloc, now)
         heapq.heappush(events, (end, placed))
@@ -94,9 +96,11 @@ def test_engine_parity_given_rows(seed, name, n_nodes, window):
     trunc = [dataclasses.replace(t, executions=t.executions[: nt + 10]) for t, nt in traces]
     ladders = compute_cluster_ladders(trunc, POLICIES, NODE_MIB, KSegmentsConfig(error_mode="progressive"))
     for policy in POLICIES:
-        bnd_rows, val_rows, run_rows, _counts, _waste = _policy_rows(ladders, queue, policy)
-        ref = _scalar_place_rows(bnd_rows, val_rows, run_rows, n_nodes)
-        rn, rs, re = _place_rows_batched(bnd_rows, val_rows, run_rows, n_nodes, NODE_MIB, window, None)
+        bnd_rows, val_rows, run_rows, probe_rows, _counts, _waste = _policy_rows(ladders, queue, policy)
+        ref = _scalar_place_rows(bnd_rows, val_rows, run_rows, probe_rows, n_nodes)
+        rn, rs, re = _place_rows_batched(
+            bnd_rows, val_rows, run_rows, probe_rows, n_nodes, NODE_MIB, window, None
+        )
         got = [(int(rn[r]), float(rs[r]), float(re[r])) for r in range(len(run_rows))]
         assert got == ref, policy
 
@@ -151,6 +155,26 @@ def test_placement_parity_across_fracs():
             min_executions=8,
             train_frac=frac,
         )
+
+
+def test_x64_ladders_exact_parity_on_f32_boundary_seed():
+    """The float64 ladder option on the corpus that historically flipped
+    end-to-end parity (sarek seed 11 at scale 0.06 — a prediction lands
+    within a float32 ulp of a capacity comparison; the probe-window fix in
+    this PR resolved the dominant divergence, and ``ladder_x64`` closes the
+    residual ulp-boundary class).  Exact (node, start, end) parity with the
+    float64 numpy oracle across all bench policies."""
+    wfs = [generate_workflow("sarek", seed=11, scale=0.06)]
+    kw = dict(n_nodes=3, max_tasks_per_type=10, min_executions=8, train_frac=0.5)
+    cfg = KSegmentsConfig(error_mode="progressive")
+    batched = run_cluster_batched(wfs, POLICIES, ladder_x64=True, **kw)
+    for policy in POLICIES:
+        seq = run_cluster(wfs, policy, ksegments_config=cfg, **kw)
+        bat = batched[policy]
+        assert seq.retries == bat.retries, policy
+        for rs, rb in zip(seq.records, bat.records):
+            assert rs.attempts == rb.attempts, policy
+            assert rs.placements == rb.placements, policy
 
 
 @settings(deadline=None, max_examples=5)

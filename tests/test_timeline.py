@@ -1,0 +1,216 @@
+"""The shared event timeline (``repro.core.timeline``): incremental-profile
+cache coherence under expire/add_many interleaving, the probe-set dedup
+helper, and the Timeline probe methods.
+
+The expire/add_many interleave is the regression for the cache-invalidation
+class of bug that previously bit ``AdmissionController._prof``: ``expire``
+has a min-release fast path that returns without touching the event arrays,
+and every derived cache (the lazy cumulative sum, ``version``-keyed caches
+in callers, the min-release bound itself) must stay coherent through any
+interleaving of fast-path hits, real expiries and batched adds.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.allocation import StepAllocation
+from repro.core.timeline import (
+    IncrementalDemandProfile,
+    Timeline,
+    demand_exceeds,
+    demand_exceeds_many,
+    shared_probe_set,
+)
+from repro.sim.cluster import NodeState
+
+
+def _rand_res(rng, k=3):
+    b = np.sort(rng.uniform(0.5, 30.0, k))
+    v = np.maximum.accumulate(rng.uniform(10.0, 400.0, k))
+    return b, v
+
+
+def _rebuilt(tl: Timeline, rows) -> Timeline:
+    """A from-scratch profile holding the same still-live reservations."""
+    fresh = Timeline()
+    for owner, (b, v, s, e) in rows.items():
+        if owner in tl:
+            fresh.add(owner, b, v, s, e)
+    return fresh
+
+
+def test_expire_fast_path_keeps_caches_coherent():
+    """Interleave add/add_many with expire calls that alternately hit the
+    min-release fast path and actually drop rows; after every step the
+    cached cumulative profile must match a from-scratch rebuild and
+    ``version`` must change iff the event arrays changed."""
+    rng = np.random.default_rng(0)
+    tl = Timeline()
+    rows: dict = {}
+    owner = 0
+    clock = 0.0
+    for step in range(40):
+        op = rng.random()
+        ver = tl.version
+        t_before, c_before = (a.copy() for a in tl.arrays())
+        if op < 0.45:
+            n = int(rng.integers(1, 4))
+            bs, vs, ss, es = [], [], [], []
+            names = []
+            for _ in range(n):
+                b, v = _rand_res(rng)
+                s = clock + float(rng.uniform(0.0, 10.0))
+                e = s + float(rng.uniform(5.0, 40.0))
+                rows[owner] = (b, v, s, e)
+                names.append(owner)
+                bs.append(b), vs.append(v), ss.append(s), es.append(e)
+                owner += 1
+            tl.add_many(names, np.stack(bs), np.stack(vs), ss, es)
+            assert tl.version != ver  # arrays changed -> caches must re-key
+        elif op < 0.7:
+            # a time strictly before every live release: the fast path MUST
+            # hit and MUST leave arrays, caches and version untouched
+            live = [e for o, (_, _, _, e) in rows.items() if o in tl]
+            if live:
+                tl.expire(min(live) - 1.0)
+                t, c = tl.arrays()
+                np.testing.assert_array_equal(t, t_before)
+                np.testing.assert_array_equal(c, c_before)
+                assert tl.version == ver
+        else:
+            clock += float(rng.uniform(5.0, 25.0))
+            dropped = [o for o, (_, _, _, e) in rows.items() if o in tl and e <= clock]
+            tl.expire(clock)
+            for o in dropped:
+                assert o not in tl
+            if dropped:
+                assert tl.version != ver
+        fresh = _rebuilt(tl, rows)
+        tf, cf = fresh.arrays()
+        t, c = tl.arrays()
+        assert len(t) == len(tf)
+        np.testing.assert_array_equal(np.sort(t), np.sort(tf))
+        # probe a grid: the maintained profile must read identically to the
+        # rebuilt one at every instant (value-coherence of the cum cache)
+        grid = np.concatenate([tf, [clock, clock + 100.0]]) if len(tf) else np.asarray([clock])
+        got = c[np.searchsorted(t, grid, side="right")]
+        want = cf[np.searchsorted(tf, grid, side="right")]
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-9)
+
+
+def test_node_state_expire_interleaved_with_add_many():
+    """NodeState's profile must survive expire (incl. fast-path hits) and
+    vectorized add_many commits without a stale cumulative profile."""
+    rng = np.random.default_rng(7)
+    nd = NodeState(capacity_mib=5000.0)
+    active = []
+    clock = 0.0
+    for _ in range(25):
+        b, v = _rand_res(rng)
+        s = clock + float(rng.uniform(0.0, 5.0))
+        e = s + float(rng.uniform(3.0, 30.0))
+        nd.add(e, StepAllocation(b, v), s)
+        active.append((e, StepAllocation(b, v), s))
+        # expire at a time before every active end: fast path territory
+        nd.expire(min(a[0] for a in active) - 0.5)
+        if rng.random() < 0.4:
+            clock += float(rng.uniform(5.0, 20.0))
+            nd.expire(clock)
+            active = [a for a in active if a[0] > clock]
+        # oracle read: rebuilt node with the same still-active rows
+        fresh = NodeState(capacity_mib=5000.0)
+        for e2, a2, s2 in active:
+            fresh.add(e2, a2, s2)
+        for t in [clock, clock + 1.0, clock + 10.0, clock + 50.0]:
+            assert np.isclose(nd.reserved_at(t), fresh.reserved_at(t), rtol=1e-12, atol=1e-9)
+
+
+def test_expired_rows_do_not_change_future_probes():
+    """Dropping released reservations must not flip any fit decision at
+    probes past the expiry clock."""
+    tl = Timeline()
+    tl.add("a", np.asarray([5.0]), np.asarray([400.0]), 0.0, 10.0)
+    tl.add("b", np.asarray([5.0]), np.asarray([300.0]), 0.0, 30.0)
+    cand = StepAllocation(np.asarray([4.0]), np.asarray([500.0]))
+    before = tl.demand_exceeds(cand, 15.0, 25.0, 800.0)
+    tl.expire(12.0)
+    assert "a" not in tl and "b" in tl
+    assert tl.demand_exceeds(cand, 15.0, 25.0, 800.0) == before
+
+
+# ---------------------------------------------------------------------------
+# shared probe set
+# ---------------------------------------------------------------------------
+
+
+def test_shared_probe_set_dedups_and_sorts():
+    a = np.asarray([3.0, 1.0, 2.0])
+    b = np.asarray([[2.0, 5.0], [1.0, 3.0]])  # raveled; overlaps a
+    P = shared_probe_set(a, b)
+    np.testing.assert_array_equal(P, [1.0, 2.0, 3.0, 5.0])
+
+
+def test_shared_probe_set_inverse_maps_back():
+    a = np.asarray([4.0, 4.0, 1.0])
+    b = np.asarray([1.0, 9.0])
+    P, inv = shared_probe_set(a, b, return_inverse=True)
+    np.testing.assert_array_equal(P, [1.0, 4.0, 9.0])
+    cat = np.concatenate([a, b])
+    np.testing.assert_array_equal(P[inv.ravel()], cat)
+
+
+def test_probe_dedup_cannot_change_decisions():
+    """Probing a step profile at duplicated instants reads identical values
+    — dedup must never flip a demand_exceeds verdict."""
+    rng = np.random.default_rng(3)
+    tl = Timeline()
+    for i in range(6):
+        b, v = _rand_res(rng)
+        s = float(rng.uniform(0.0, 20.0))
+        tl.add(i, b, v, s, s + float(rng.uniform(5.0, 30.0)))
+    times, cum = tl.arrays()
+    # duplicate-heavy probe grid vs its deduped version
+    grid = np.concatenate([times, times, np.repeat(times[:4], 3)]) if len(times) else np.zeros(1)
+    dedup = shared_probe_set(grid)
+    got_dup = cum[np.searchsorted(times, grid, side="right")]
+    got_ded = cum[np.searchsorted(times, dedup, side="right")]
+    assert set(np.round(got_dup, 9)) == set(np.round(got_ded, 9))
+
+
+# ---------------------------------------------------------------------------
+# Timeline probe methods == free functions
+# ---------------------------------------------------------------------------
+
+
+def test_timeline_methods_match_free_functions():
+    rng = np.random.default_rng(11)
+    tl = Timeline()
+    for i in range(5):
+        b, v = _rand_res(rng)
+        s = float(rng.uniform(0.0, 15.0))
+        tl.add(i, b, v, s, s + float(rng.uniform(5.0, 25.0)))
+    cand = StepAllocation(*_rand_res(rng))
+    times, cum = tl.arrays()
+    for s in (0.0, 3.0, 17.5):
+        for inc in (False, True):
+            assert tl.demand_exceeds(cand, s, s + 12.0, 900.0, inclusive_end=inc) == demand_exceeds(
+                times, cum, cand, s, s + 12.0, 900.0, inclusive_end=inc
+            )
+    starts = np.asarray([0.0, 2.0, 9.0, 21.0])
+    np.testing.assert_array_equal(
+        tl.demand_exceeds_many(cand, starts, 8.0, 900.0),
+        demand_exceeds_many(times, cum, cand, starts, 8.0, 900.0),
+    )
+
+
+def test_incremental_demand_profile_alias():
+    """The historical name must stay importable and be the same class."""
+    assert IncrementalDemandProfile is Timeline
+
+
+def test_add_many_duplicate_owner_leaves_state_clean():
+    tl = Timeline()
+    tl.add("x", np.asarray([2.0]), np.asarray([100.0]), 0.0, 5.0)
+    with pytest.raises(ValueError):
+        tl.add_many(["y", "x"], np.full((2, 1), 2.0), np.full((2, 1), 50.0), [0.0, 0.0], [4.0, 4.0])
+    assert "y" not in tl and tl.n_owners == 1
