@@ -19,9 +19,12 @@ figure's headline quantity).
             the latter); always writes BENCH_cluster.json (per-variant
             policy/engine rows, cold/warm walls, placement counters incl.
             waits resolved in-program vs host; path override via
-            REPRO_BENCH_CLUSTER_JSON).  --min-speedup X fails the run when
-            a variant's warm speedup drops below X (CI canary; also checked
-            by serve's microbench)
+            REPRO_BENCH_CLUSTER_JSON).  --sweep additionally records the
+            capacity-planning grid variant: every (corpus x policy x node
+            count) design point as one lane of a single vmapped device
+            dispatch, with the makespan/wastage Pareto frontier per corpus.
+            --min-speedup X fails the run when a variant's warm speedup
+            drops below X (CI canary; also checked by serve's microbench)
   roofline — aggregated dry-run roofline table (reads results/dryrun/)
 
 Run all:    PYTHONPATH=src python -m benchmarks.run
@@ -50,6 +53,27 @@ by cell (the parity tests in tests/test_batch_engine.py assert per-execution
 agreement); simulation *tests* keep exercising the insample default.
 ``REPRO_PALLAS_INTERPRET=0`` additionally switches the ``kernels`` bench to
 the compiled Pallas path on TPU hosts (see repro.kernels.ops).
+
+``cluster`` itself picks between two batched placement engines
+(``run_cluster_batched(placement=...)``): *shallow* multi-policy runs
+(every lane at most ``_SWEEP_AUTO_ROWS`` attempt rows) route through the
+lane-vmapped whole-run *sweep* program (one dispatch for all policies;
+wait re-probes answered by sparse-table range-max lookups, built by the
+Pallas range-max kernel when ``REPRO_PALLAS_INTERPRET=0`` on TPU).  Deep
+runs — the bench's congested variant included — keep the streaming
+*windows* + epoch-program pipeline: the sweep's row-serial scan carries
+whole-run timelines whose axis grows with a deep run's live events, while
+the windows loop amortizes depth across 128-row batched dispatches.
+``--sweep`` stacks the full capacity grid — node counts and a second-seed
+corpus included — into one forced sweep dispatch via ``run_cluster_sweep``.
+
+The persistent XLA compile cache is ON by default for every bench run
+(``repro.compat.enable_compile_cache``; dir ``~/.cache/repro-xla``, override
+with ``REPRO_COMPILE_CACHE=<dir>``, disable with ``REPRO_COMPILE_CACHE=off``)
+— the cluster variants' ~45 s cold compile otherwise dominates any fresh
+run.  Each cluster variant records its cold/warm walls alongside the cache
+hits observed during them (``compile_cache`` fields), so a cache-warm rerun
+is visible as cold_wall collapsing toward warm_wall with non-zero hits.
 """
 
 from __future__ import annotations
@@ -77,6 +101,34 @@ _FAILURES: list[str] = []
 # lands below X — the CI perf canary for the cluster and serve benches.
 MIN_SPEEDUP: float | None = None
 CONGESTED_ONLY = False
+SWEEP = False
+# Persistent-compile-cache state: directory actually enabled (None when the
+# user opted out) and a monotone cache-hit counter fed by jax's monitoring
+# events; benches snapshot it around cold/warm sections.
+COMPILE_CACHE_DIR: str | None = None
+_CACHE_HITS = [0]
+
+
+def _enable_compile_cache() -> None:
+    """Turn the persistent XLA compile cache ON (default ~/.cache/repro-xla;
+    ``REPRO_COMPILE_CACHE=off|0`` opts out) and start counting cache hits.
+    Must run before any bench compiles — main() calls it first."""
+    global COMPILE_CACHE_DIR
+    from repro.compat import enable_compile_cache
+
+    path = os.environ.get("REPRO_COMPILE_CACHE", "~/.cache/repro-xla")
+    if path.lower() in ("", "0", "off", "none"):
+        return
+    COMPILE_CACHE_DIR = enable_compile_cache(path)
+    try:
+        from jax._src import monitoring
+    except ImportError:  # a future jax moving the private module: run uncounted
+        return
+    monitoring.register_event_listener(
+        lambda name, **kw: _CACHE_HITS.__setitem__(0, _CACHE_HITS[0] + 1)
+        if "compilation_cache/cache_hit" in name
+        else None
+    )
 
 
 def _fail(msg: str) -> None:
@@ -495,20 +547,24 @@ def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
     wfs = _suite()
     cfg = KSegmentsConfig(error_mode="progressive")
 
+    hits0 = _CACHE_HITS[0]
     t0 = time.time()
     run_cluster_batched(wfs, policies, **kw)
     cold = time.time() - t0
+    hits_cold = _CACHE_HITS[0] - hits0
     # warm: best of two passes (single-sample walls on shared CI hosts jitter
     # by 2x; the minimum is the standard steady-state estimator)
     warm = float("inf")
     place_stats: dict = {}
     res_b: dict = {}
+    hits1 = _CACHE_HITS[0]
     for _ in range(2):
         stats_i: dict = {}
         t0 = time.time()
         res_b = run_cluster_batched(wfs, policies, placement_stats=stats_i, **kw)
         if time.time() - t0 < warm:
             warm, place_stats = time.time() - t0, stats_i
+    hits_warm = _CACHE_HITS[0] - hits1
     res_py: dict = {}
     py_wall: dict = {}
     t0 = time.time()
@@ -555,6 +611,14 @@ def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
                 # (see batch_cold_wall_s / batch_warm_wall_s in the header).
                 row["wall_s"] = round(py_wall[p], 4)
             rows.append(row)
+    # the default policy makes identical decisions on identical allocations
+    # in both engines, so with f64 device-side wastage accumulation its
+    # wastage must agree BIT FOR BIT with the sequential oracle (the other
+    # policies' residues come from f32 prediction paths, not accumulation)
+    if "default" in policies:
+        wp, wb = res_py["default"].wastage_gib_s, res_b["default"].wastage_gib_s
+        if wp != wb:
+            _fail(f"cluster/{name}: default-policy wastage not bit-equal across engines ({wp!r} != {wb!r})")
     _row(
         f"cluster/{name}/placement_program",
         place_stats.get("program_wall_s", 0.0) * 1e6 / max(place_stats.get("program_calls", 1), 1),
@@ -583,6 +647,135 @@ def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
             "waits_program": place_stats.get("waits_program", 0),
             "waits_host": place_stats.get("waits_host", 0),
         },
+        "compile_cache": {
+            "dir": COMPILE_CACHE_DIR,
+            "hits_cold": hits_cold,
+            "hits_warm": hits_warm,
+        },
+        "rows": rows,
+    }
+
+
+def _cluster_sweep_variant() -> dict:
+    """``--sweep``: the capacity-planning grid.  Every (corpus x policy x
+    node count) design point becomes one lane of a SINGLE vmapped device
+    dispatch (``run_cluster_sweep``); the fragment records per-corpus
+    makespan/wastage Pareto frontiers and an exact-parity spot check (bit
+    equality, per-attempt placements) against the per-policy windows
+    engine."""
+    from repro.sim import generate_suite
+    from repro.sim.cluster import pareto_frontier, run_cluster_batched, run_cluster_sweep
+
+    policies = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
+    node_counts = (8, 16, 32)
+    mtpt = max(int(120 * SCALE), 8)
+    # two corpora = two generator seeds: the "seeds" axis of the design grid
+    corpora = {"seed0": _suite(), "seed1": generate_suite(seed=SEED + 1, scale=SCALE)}
+    kw = dict(max_tasks_per_type=mtpt, train_frac=0.5)
+    lanes = len(corpora) * len(policies) * len(node_counts)
+
+    hits0 = _CACHE_HITS[0]
+    t0 = time.time()
+    run_cluster_sweep(corpora, policies, node_counts=node_counts, **kw)
+    cold = time.time() - t0
+    hits_cold = _CACHE_HITS[0] - hits0
+    warm = float("inf")
+    stats: dict = {}
+    res: dict = {}
+    hits1 = _CACHE_HITS[0]
+    for _ in range(2):
+        st_i: dict = {}
+        t0 = time.time()
+        res = run_cluster_sweep(
+            corpora, policies, node_counts=node_counts, placement_stats=st_i, **kw
+        )
+        if time.time() - t0 < warm:
+            warm, stats = time.time() - t0, st_i
+    hits_warm = _CACHE_HITS[0] - hits1
+
+    n = sum(r.tasks_run for r in res.values())
+    _row(
+        "cluster/sweep/grid_cold",
+        cold * 1e6 / max(n, 1),
+        f"wall_s={cold:.2f} lanes={lanes} (includes jit compile)",
+        engine="batch",
+    )
+    _row(
+        "cluster/sweep/grid_warm",
+        warm * 1e6 / max(n, 1),
+        f"wall_s={warm:.2f} lanes={lanes} program_calls={stats.get('program_calls', 0)}",
+        engine="batch",
+    )
+
+    # parity spot check: one mid-grid lane replayed through the windows
+    # engine must match bit for bit, attempt for attempt
+    pc, pp, pn = "seed0", "ksegments-selective", node_counts[1]
+    ref = run_cluster_batched(corpora[pc], (pp,), n_nodes=pn, placement="windows", **kw)[pp]
+    got = res[(pc, pp, pn)]
+    exact = (
+        got.makespan_s == ref.makespan_s
+        and got.wastage_gib_s == ref.wastage_gib_s
+        and got.retries == ref.retries
+        and len(got.records) == len(ref.records)
+        and all(ra.placements == rb.placements for ra, rb in zip(got.records, ref.records))
+    )
+    if not exact:
+        _fail(f"cluster/sweep: lane {(pc, pp, pn)} diverged from the windows engine")
+
+    rows = []
+    frontiers = {}
+    for c in corpora:
+        keys = sorted(k for k in res if k[0] == c)
+        pts = [(res[k].makespan_s, res[k].wastage_gib_s) for k in keys]
+        keep = pareto_frontier(pts)
+        frontiers[c] = int(keep.sum())
+        for k, on in zip(keys, keep):
+            r = res[k]
+            rows.append(
+                {
+                    "corpus": k[0],
+                    "policy": k[1],
+                    "n_nodes": k[2],
+                    "makespan_s": round(r.makespan_s, 3),
+                    "wastage_gib_s": round(r.wastage_gib_s, 3),
+                    "retries": r.retries,
+                    "tasks_run": r.tasks_run,
+                    "pareto": bool(on),
+                }
+            )
+        _row(
+            f"cluster/sweep/pareto/{c}",
+            warm * 1e6 / max(len(keys), 1),
+            f"frontier={frontiers[c]}/{len(keys)} points",
+            engine="batch",
+        )
+    if stats.get("program_calls", 0) != 1:
+        _fail(
+            f"cluster/sweep: grid took {stats.get('program_calls', 0)} device dispatches (want 1; "
+            f"a lane overflowing the timeline cap falls back to the windows engine)"
+        )
+    return {
+        "policies": list(policies),
+        "node_counts": list(node_counts),
+        "corpora": list(corpora),
+        "max_tasks_per_type": mtpt,
+        "train_frac": 0.5,
+        "lanes": lanes,
+        "cold_wall_s": round(cold, 4),
+        "warm_wall_s": round(warm, 4),
+        "placement": {
+            "rows": stats.get("rows", 0),
+            "program_calls": stats.get("program_calls", 0),
+            "program_wall_s": round(stats.get("program_wall_s", 0.0), 4),
+            "waits_program": stats.get("waits_program", 0),
+            "waits_host": stats.get("waits_host", 0),
+        },
+        "compile_cache": {
+            "dir": COMPILE_CACHE_DIR,
+            "hits_cold": hits_cold,
+            "hits_warm": hits_warm,
+        },
+        "parity": {"corpus": pc, "policy": pp, "n_nodes": pn, "vs": "windows", "exact": bool(exact)},
         "rows": rows,
     }
 
@@ -631,6 +824,10 @@ def bench_cluster() -> None:
         tuple(ENGINE_METHODS),
         dict(n_nodes=32, max_tasks_per_type=3 * mtpt, train_frac=0.5),
     )
+    if SWEEP:
+        # the capacity-planning grid: one lane-vmapped dispatch for the full
+        # (corpus x policy x node count) design space + Pareto frontiers
+        variants["sweep"] = _cluster_sweep_variant()
     payload = {"scale": SCALE, "seed": SEED, "variants": variants}
     with open(CLUSTER_JSON, "w") as f:
         json.dump(payload, f, indent=1)
@@ -638,7 +835,10 @@ def bench_cluster() -> None:
     for name, v in variants.items():
         if v["placement"]["waits_host"]:
             _fail(f"cluster/{name}: {v['placement']['waits_host']} host-resolved waits (want 0)")
-        if MIN_SPEEDUP is not None and v["warm_speedup"] < MIN_SPEEDUP:
+        # the sweep variant has no engine-vs-engine speedup of its own (its
+        # headline is the single-dispatch grid); the gate applies to the
+        # standard/congested engine comparisons
+        if MIN_SPEEDUP is not None and "warm_speedup" in v and v["warm_speedup"] < MIN_SPEEDUP:
             _fail(f"cluster/{name}: warm speedup {v['warm_speedup']} < --min-speedup {MIN_SPEEDUP}")
 
 
@@ -683,7 +883,7 @@ BENCHES = {
 
 
 def main() -> None:
-    global SCALE, MIN_SPEEDUP, CONGESTED_ONLY
+    global SCALE, MIN_SPEEDUP, CONGESTED_ONLY, SWEEP
     args = sys.argv[1:]
     json_path = None
     if "--json" in args:
@@ -709,6 +909,11 @@ def main() -> None:
         # cluster bench: run only the congested variant
         args.remove("--congested")
         CONGESTED_ONLY = True
+    if "--sweep" in args:
+        # cluster bench: also run the capacity-planning grid variant
+        args.remove("--sweep")
+        SWEEP = True
+    _enable_compile_cache()  # before any bench compiles
     names = args or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -69,7 +69,12 @@ def enable_compile_cache(path: str | None = None) -> str | None:
     ``REPRO_COMPILE_CACHE`` env var; no-op when neither is set).  Thresholds
     drop to zero so even sub-second bucket programs are cached — the batched
     engines' cold start is dominated by many small compiles, not one big
-    one.  Returns the cache directory actually enabled, or None."""
+    one.  Returns the cache directory actually enabled, or None.
+
+    Caveat (jax 0.4.37, XLA:CPU): executables jitted with ``donate_argnums``
+    must not run in a process with this cache enabled — donated buffers
+    corrupt the heap and the process later dies in unrelated native code
+    (see Trainer._step_fn, which drops donation on the CPU backend)."""
     path = path or os.environ.get("REPRO_COMPILE_CACHE")
     if not path:
         return None

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fitstats as _fitstats
+from repro.kernels import rangemax as _rangemax
 from repro.kernels import segmax as _segmax
 from repro.kernels import wastage as _wastage
 
@@ -135,3 +136,34 @@ def _attempt_wastage_jit(
     waste = jnp.where(failed, raw[:, 1], raw[:, 0]) * interval_s / MIB_PER_GIB
     fail_idx = jnp.where(failed, raw[:, 2].astype(jnp.int32), -1)
     return waste, fail_idx
+
+
+def range_max_table(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """(..., B, L) demand rows -> (..., B, P, L) sparse-table range-max levels.
+
+    ``out[..., p, i] = max(x[..., i : i + 2**p])`` — the doubling table the
+    scheduling programs' wait probes query in O(log L) (two lookups per
+    window; see ``sim.device_timeline``).  Padded/masked positions should
+    carry -inf (the max identity).
+
+    Float32 inputs route through the Pallas kernel (padded to tile
+    multiples); float64 — the scheduling programs' working precision, which
+    the TPU kernel cannot hold — uses the jnp twin, bit-identical by
+    construction (both are the same max/shift recurrence).  Safe to call
+    from inside traced programs: dispatch happens at trace time.
+    """
+    if x.dtype != jnp.float32 or x.ndim != 2:
+        return _rangemax.table_levels_jnp(x)
+    interpret = _use_interpret() if interpret is None else interpret
+    return _range_max_table_jit(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _range_max_table_jit(x: jax.Array, *, interpret: bool) -> jax.Array:
+    B, L = x.shape
+    xp = _pad_cols(_pad_rows(x, _rangemax.BLOCK_B, fill=-jnp.inf), _rangemax.LANE, fill=-jnp.inf)
+    P = _rangemax.num_levels(L)
+    out = _rangemax.rangemax_pallas(xp, interpret=interpret)[:B]
+    # the padded axis may add levels the caller's L never needs; the first P
+    # levels are span-identical because the pad region is the -inf identity
+    return out[:, :P, :L]

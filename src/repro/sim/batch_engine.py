@@ -273,12 +273,17 @@ def compute_cluster_ladders(
     dt = jnp.float64 if x64 else jnp.float32
 
     def _run(batch):
-        import contextlib
-
-        with _x64_ctx() if x64 else contextlib.nullcontext():
+        # The x64 context is held open for BOTH ladder dtypes: the attempt
+        # scorer accumulates wastage in float64 whenever x64 is live
+        # (``jax_sim._acc_dtype``), which the f32 ladder wants too — its
+        # *decisions* stay f32, only the reported sums gain the oracle's
+        # precision.  Inputs are therefore cast to the working dtype on the
+        # host (under the context ``jnp.asarray`` would silently promote the
+        # float64 trace arrays and change the f32 path's rounding).
+        with _x64_ctx():
             tbl = fn(
-                jnp.asarray(batch.x),
-                jnp.asarray(batch.y),
+                jnp.asarray(batch.x.astype(dt)),
+                jnp.asarray(batch.y.astype(dt)),
                 jnp.asarray(batch.lengths),
                 jnp.asarray(batch.default_mib, dt),
                 jnp.asarray(kcfg.k, jnp.int32),

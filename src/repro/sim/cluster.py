@@ -31,6 +31,16 @@ path's ``IncrementalDemandProfile``):
   match the oracle run with ``KSegmentsConfig(error_mode="progressive")`` —
   see tests/test_cluster_batch.py, tests/test_cluster_placement.py and
   tests/test_cluster_congested.py.
+
+With more than one policy and shallow lanes (at most ``_SWEEP_AUTO_ROWS``
+attempt rows each), ``run_cluster_batched`` routes placement through the
+lane-vmapped whole-run sweep program by default (one dispatch for the whole
+policy set; deep runs amortize better through the per-policy windows loop,
+and ``placement="windows"``/``"sweep"`` force either engine), and
+``run_cluster_sweep`` extends the same program to the full
+capacity-planning design space — (corpus x policy x node count) lanes in
+one warm dispatch, Pareto-reducible via ``pareto_frontier`` — see
+tests/test_cluster_sweep.py.
 """
 
 from __future__ import annotations
@@ -503,6 +513,52 @@ def _place_rows_batched(
     return row_node, row_start, row_end
 
 
+def _policy_result(
+    policy: str,
+    queue: list[tuple[TaskTrace, int]],
+    counts: np.ndarray,
+    waste: np.ndarray,
+    row_node: np.ndarray,
+    row_start: np.ndarray,
+    row_end: np.ndarray,
+) -> ClusterResult:
+    """Assemble one policy's ``ClusterResult`` from its placed attempt rows
+    (shared by the windows and sweep placement engines)."""
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    records = [
+        TaskRecord(
+            trace.workflow,
+            trace.name,
+            i,
+            int(counts[q]),
+            [
+                (int(row_node[j]), float(row_start[j]), float(row_end[j]))
+                for j in range(offsets[q], offsets[q + 1])
+            ],
+            float(waste[q]),
+        )
+        for q, (trace, i) in enumerate(queue)
+    ]
+    return ClusterResult(
+        policy=policy,
+        makespan_s=float(row_end.max()) if len(row_end) else 0.0,
+        wastage_gib_s=float(waste.sum()),
+        retries=int((counts - 1).sum()),
+        tasks_run=len(queue),
+        records=records,
+    )
+
+
+# "auto" placement routes multi-policy runs through the lane-vmapped sweep
+# program only while every lane stays at most this many attempt rows deep.
+# Beyond it the per-policy windows loop wins: the sweep's row-serial scan
+# carries whole-run timelines whose axis grows with the run's live events
+# (measured ~4 ms/row at ~1k-row congested lanes vs ~0.3 ms/row shallow),
+# while the windows loop amortizes depth across 128-row batched dispatches —
+# at ~170-row lanes the windows loop already wins ~2x.
+_SWEEP_AUTO_ROWS = 128
+
+
 def run_cluster_batched(
     workflows: list[WorkflowTrace],
     policies: tuple[str, ...],
@@ -513,9 +569,10 @@ def run_cluster_batched(
     min_executions: int = 10,
     ksegments_config: KSegmentsConfig | None = None,
     max_attempts: int = 32,
-    placement_window: int = 32,
+    placement_window: int = 128,
     placement_stats: dict | None = None,
     ladder_x64: bool = False,
+    placement: str = "auto",
 ) -> dict[str, ClusterResult]:
     """Evaluate every policy through the cluster in one device pass.
 
@@ -542,9 +599,26 @@ def run_cluster_batched(
     "progressive" is rejected to keep results honest.  ``ladder_x64`` runs
     the ladder scan in float64, closing the rare f32 ulp-boundary parity gap
     against the float64 numpy predictors at ~1.5x ladder cost.
+
+    ``placement`` picks the placement engine: ``"windows"`` runs the
+    per-policy streaming/epoch windows loop above; ``"sweep"`` schedules
+    every policy as one lane of a single vmapped whole-run program
+    (``device_timeline.sweep_schedule`` — identical decisions, one dispatch
+    for the whole policy set instead of a host loop of windows); ``"auto"``
+    (default) sweeps when there is more than one policy to amortize over
+    AND every lane is shallow (``<= _SWEEP_AUTO_ROWS`` attempt rows).  The
+    sweep's row-serial scan carries each lane's whole-run timelines, whose
+    axis grows with the live events a deep run accumulates, so its per-row
+    cost rises with lane depth while the windows engine amortizes depth
+    across 128-row batched dispatches — wide shallow grids belong to the
+    sweep, deep runs to the windows loop.  A sweep lane that overflows the
+    program's bounded timeline axis falls back to the windows engine for
+    that policy alone.
     """
     from repro.sim.batch_engine import compute_cluster_ladders  # deferred: keeps the oracle jax-free
 
+    if placement not in ("auto", "sweep", "windows"):
+        raise ValueError(f"unknown placement engine: {placement!r}")
     kcfg = ksegments_config or KSegmentsConfig(error_mode="progressive")
     if kcfg.error_mode != "progressive":
         raise ValueError("run_cluster_batched supports only progressive error offsets")
@@ -560,47 +634,137 @@ def run_cluster_batched(
     ]
     ladders = compute_cluster_ladders(trunc, policies, node_mib, kcfg, max_attempts, x64=ladder_x64)
 
-    def _run_policy(policy: str) -> tuple[str, ClusterResult, dict]:
-        stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
-        bnd_rows, val_rows, run_rows, probe_rows, counts, waste = _policy_rows(ladders, queue, policy)
-        row_node, row_start, row_end = _place_rows_batched(
-            bnd_rows, val_rows, run_rows, probe_rows, n_nodes, node_mib, placement_window, stats
-        )
-        stats["rows"] = len(run_rows)
-        offsets = np.concatenate([[0], np.cumsum(counts)])
-        records = [
-            TaskRecord(
-                trace.workflow,
-                trace.name,
-                i,
-                int(counts[q]),
-                [
-                    (int(row_node[j]), float(row_start[j]), float(row_end[j]))
-                    for j in range(offsets[q], offsets[q + 1])
-                ],
-                float(waste[q]),
-            )
-            for q, (trace, i) in enumerate(queue)
-        ]
-        result = ClusterResult(
-            policy=policy,
-            makespan_s=float(row_end.max()) if len(row_end) else 0.0,
-            wastage_gib_s=float(waste.sum()),
-            retries=int((counts - 1).sum()),
-            tasks_run=len(queue),
-            records=records,
-        )
-        return policy, result, stats
+    rows = {p: _policy_rows(ladders, queue, p) for p in policies}
+    stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
+    placed: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+    deep = max(len(rows[p][2]) for p in policies) > _SWEEP_AUTO_ROWS
+    if placement == "sweep" or (placement == "auto" and len(policies) > 1 and not deep):
+        from repro.sim.device_timeline import sweep_schedule
 
-    # The policies' schedulers are independent simulations but share the
-    # process's device stream: running them on threads serializes on the jit
-    # dispatch lock while stalling each other's host bookkeeping (measured
-    # ~2x slower), so they run sequentially.
-    outs = [_run_policy(p) for p in policies]
+        node_s, start_s, _, _, dead = sweep_schedule(
+            [rows[p][:4] for p in policies],
+            [n_nodes] * len(policies),
+            [node_mib + 1e-6] * len(policies),
+            stats=stats,
+        )
+        for s, p in enumerate(policies):
+            if not dead[s]:
+                run_rows = rows[p][2]
+                r = len(run_rows)
+                placed[p] = (node_s[s, :r], start_s[s, :r], start_s[s, :r] + run_rows)
+    # Remaining policies (windows engine, or sweep lanes that overflowed):
+    # independent simulations sharing the process's device stream — threads
+    # serialize on the jit dispatch lock (measured ~2x slower), so
+    # sequentially.
+    for p in policies:
+        if p not in placed:
+            bnd_rows, val_rows, run_rows, probe_rows = rows[p][:4]
+            placed[p] = _place_rows_batched(
+                bnd_rows, val_rows, run_rows, probe_rows, n_nodes, node_mib, placement_window, stats
+            )
     results: dict[str, ClusterResult] = {}
-    for policy, result, stats in outs:
-        results[policy] = result
-        if placement_stats is not None:
-            for k_, v in stats.items():
-                placement_stats[k_] = placement_stats.get(k_, 0) + v
+    for p in policies:
+        counts, waste = rows[p][4], rows[p][5]
+        stats["rows"] += len(rows[p][2])
+        results[p] = _policy_result(p, queue, counts, waste, *placed[p])
+    if placement_stats is not None:
+        for k_, v in stats.items():
+            placement_stats[k_] = placement_stats.get(k_, 0) + v
     return results
+
+
+def run_cluster_sweep(
+    corpora: dict[str, list[WorkflowTrace]] | list[WorkflowTrace],
+    policies: tuple[str, ...],
+    node_counts: tuple[int, ...] = (4,),
+    node_mib: float = 128 * 1024.0,
+    train_frac: float = 0.5,
+    max_tasks_per_type: int = 40,
+    min_executions: int = 10,
+    ksegments_config: KSegmentsConfig | None = None,
+    max_attempts: int = 32,
+    placement_window: int = 128,
+    placement_stats: dict | None = None,
+    ladder_x64: bool = False,
+) -> dict[tuple[str, str, int], ClusterResult]:
+    """Capacity-planning sweep: the whole (corpus x policy x node count)
+    design space scheduled in ONE warm device dispatch.
+
+    Every design point becomes one lane of the vmapped whole-run program
+    (``device_timeline.sweep_schedule``): per-lane event clocks, node
+    timelines and release heaps are stacked along a leading lane axis, with
+    heterogeneous node counts masked up to the grid maximum.  Retry ladders
+    are computed once per corpus (they depend on ``node_mib``, not the node
+    count) and shared across that corpus's lanes.  Each lane's placements
+    carry the sequential oracle's exact (node, start, end) semantics — the
+    same correctness bar as ``run_cluster_batched`` — and a lane that
+    overflows the program's bounded timeline axis is replayed through the
+    per-policy windows engine (counted in ``placement_stats``).
+
+    ``corpora`` maps corpus names to workflow lists (a bare list is treated
+    as the single corpus ``""``).  Returns ``{(corpus, policy, n_nodes):
+    ClusterResult}`` — feed ``(makespan_s, wastage_gib_s)`` pairs per corpus
+    to ``pareto_frontier`` for the capacity-planning frontier.
+    """
+    from repro.sim.batch_engine import compute_cluster_ladders  # deferred: keeps the oracle jax-free
+    from repro.sim.device_timeline import sweep_schedule
+
+    if not isinstance(corpora, dict):
+        corpora = {"": corpora}
+    kcfg = ksegments_config or KSegmentsConfig(error_mode="progressive")
+    if kcfg.error_mode != "progressive":
+        raise ValueError("run_cluster_sweep supports only progressive error offsets")
+    policies = tuple(policies)
+    stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
+    lane_rows, lane_nodes, lane_keys = [], [], []
+    meta: dict[str, tuple[list, dict]] = {}
+    for cname, wfs in corpora.items():
+        queue, traces = _eligible_queue(wfs, train_frac, max_tasks_per_type, min_executions)
+        trunc = [
+            dataclasses.replace(t, executions=t.executions[: n_train + max_tasks_per_type])
+            for t, n_train in traces
+        ]
+        ladders = compute_cluster_ladders(trunc, policies, node_mib, kcfg, max_attempts, x64=ladder_x64)
+        rows = {p: _policy_rows(ladders, queue, p) for p in policies}
+        meta[cname] = (queue, rows)
+        for p in policies:
+            for nn in node_counts:
+                lane_rows.append(rows[p][:4])
+                lane_nodes.append(int(nn))
+                lane_keys.append((cname, p, int(nn)))
+    node_s, start_s, _, _, dead = sweep_schedule(
+        lane_rows, lane_nodes, [node_mib + 1e-6] * len(lane_rows), stats=stats
+    )
+    results: dict[tuple[str, str, int], ClusterResult] = {}
+    for s, (cname, p, nn) in enumerate(lane_keys):
+        queue, rows = meta[cname]
+        bnd_rows, val_rows, run_rows, probe_rows, counts, waste = rows[p]
+        stats["rows"] += len(run_rows)
+        if dead[s]:
+            node, start, end = _place_rows_batched(
+                bnd_rows, val_rows, run_rows, probe_rows, nn, node_mib, placement_window, stats
+            )
+        else:
+            r = len(run_rows)
+            node, start = node_s[s, :r], start_s[s, :r]
+            end = start + run_rows
+        results[(cname, p, nn)] = _policy_result(p, queue, counts, waste, node, start, end)
+    if placement_stats is not None:
+        for k_, v in stats.items():
+            placement_stats[k_] = placement_stats.get(k_, 0) + v
+    return results
+
+
+def pareto_frontier(points) -> np.ndarray:
+    """Boolean mask of the non-dominated rows of ``points`` (minimize every
+    column): row i is kept unless some row is <= it everywhere and < it
+    somewhere.  Ties keep both rows — duplicate design points stay visible
+    in the capacity-planning report."""
+    pts = np.asarray(points, dtype=float)
+    if pts.ndim != 2:
+        raise ValueError(f"points must be 2-D, got shape {pts.shape}")
+    keep = np.ones(len(pts), dtype=bool)
+    for i in range(len(pts)):
+        dom = (pts <= pts[i]).all(axis=1) & (pts < pts[i]).any(axis=1)
+        keep[i] = not dom.any()
+    return keep

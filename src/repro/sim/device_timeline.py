@@ -31,13 +31,14 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import enable_compile_cache
-from repro.sim.traces import bucket_size
+from repro.sim.traces import bucket_size, fine_bucket
 
 enable_compile_cache()
 
@@ -95,6 +96,190 @@ def candidate_probe_parts(P, starts, ends, rels, bnd, val, valext, sw, live, *, 
     inwin = (P[None, :] >= starts[:, None]) & (P[None, :] < rels[:, None])
     D = jnp.where(inwin, jnp.take_along_axis(valext, nst, axis=1), 0.0)
     return A, M, D
+
+
+# ---------------------------------------------------------------------------
+# Sparse-table fit probes: the O(log E) formulation of the blocked-row
+# re-probe shared by the scheduling-epoch and sweep programs.
+# ---------------------------------------------------------------------------
+
+
+def _count_sorted(tl_t, pred, q_shape):
+    """Per-row counts of the prefix satisfying a monotone predicate.
+
+    ``tl_t`` is (N, L), each row ascending (+inf padded); ``pred`` maps
+    gathered time values of shape ``q_shape = (N, Q)`` to a boolean mask and
+    must be True on a prefix of every sorted row (e.g. ``t <= p``,
+    ``t < end``, ``(t - c) <= b`` — IEEE subtraction is monotone, so
+    offset predicates bisect exactly like the dense compare-counts).
+    Returns int32 counts in [0, L]: O(log L) gathers instead of the dense
+    O(L) compare-and-sum, with identical values.
+    """
+    L = tl_t.shape[-1]
+    lo = jnp.zeros(q_shape, jnp.int32)
+    step = 1 << max(L - 1, 0).bit_length()  # smallest power of two >= L
+    while step:
+        cand = lo + step
+        t = jnp.take_along_axis(tl_t, jnp.minimum(cand - 1, L - 1), axis=1)
+        lo = jnp.where((cand <= L) & pred(t), cand, lo)
+        step >>= 1
+    return lo
+
+
+def _floor_log2_table(L: int) -> np.ndarray:
+    """Static lookup ``floor(log2(n))`` for n in [0, L] (0 at n = 0): exact
+    span selection for traced window lengths without float log2 rounding."""
+    n = np.maximum(np.arange(L + 1), 1)
+    return np.asarray([int(v).bit_length() - 1 for v in n], dtype=np.int32)
+
+
+def _range_max_query(tbl, log2_tbl, l, r):
+    """Range max over [l, r) per query from the doubling table.
+
+    ``tbl`` is (N, P, L) (``kernels.ops.range_max_table`` layout); ``l``/``r``
+    are (N, Q) int32 index bounds.  Two overlapping span lookups per query —
+    the classic sparse-table read; -inf for empty windows.
+    """
+    N, P, L = tbl.shape
+    length = jnp.maximum(r - l, 0)
+    p = log2_tbl[length]  # (N, Q): floor(log2(len))
+    span = jnp.left_shift(1, p)
+    flat = tbl.reshape(N, P * L)
+    lo = jnp.take_along_axis(flat, p * L + jnp.minimum(l, L - 1), axis=1)
+    hi = jnp.take_along_axis(flat, p * L + jnp.maximum(r - span, 0), axis=1)
+    return jnp.where(length > 0, jnp.maximum(lo, hi), -jnp.inf)
+
+
+def _tie_last(tl_t):
+    """(N, L) mask of tie-group-final positions: the sum after event i is a
+    settled profile value only when no later event shares its instant (a
+    partial mid-tie sum can overshoot and fabricate an overflow)."""
+    return jnp.concatenate(
+        [tl_t[:, :-1] != tl_t[:, 1:], jnp.isfinite(tl_t[:, -1:])], axis=1
+    )
+
+
+def _fit_tables(tl_t, tl_d, base0):
+    """Per-row precompute for the sparse fit probes: running sums and the
+    range-max table over the tie-group-final cumulative demand.
+
+    Returns ``(csm, tbl)``: ``csm`` (N, L) is the demand after event i
+    (``base0`` included) with non-tie-last positions masked to -inf, and
+    ``tbl`` (N, P, L) its doubling range-max levels
+    (``kernels.ops.range_max_table``, the Pallas-backed kernel).
+    """
+    from repro.kernels.ops import range_max_table
+
+    cs = base0[:, None] + jnp.cumsum(tl_d, axis=1)
+    csm = jnp.where(_tie_last(tl_t), cs, -jnp.inf)
+    return csm, range_max_table(csm)
+
+
+def _fit_probes(tl_t, csm, qmax, base0, b, v, pd, budget, cc, nmask=None):
+    """(C, N) fit masks of one row at clocks ``cc`` (C,) — the range-max
+    formulation of the scalar ``demand_exceeds`` pass over the full-duration
+    window [c, c + pd), decision-identical to the dense per-event scan:
+
+    * own probes (the clock + the row's switch instants): profile reads at
+      ``#(t <= p)`` via binary search instead of dense compare-counts —
+      identical counts, identical gathered sums.  ``csm`` is the running
+      demand sum with non-tie-last positions masked to -inf; a count always
+      lands after a full tie group (every event at an instant <= p is <= p),
+      so the gathers only ever read settled profile values.
+    * profile events inside the window: for segment j the dense pass tests
+      events with offset > b[j-1] (a *suffix* of the in-window events, since
+      v is non-decreasing); here that suffix is an index range from two
+      binary searches and its demand max ONE range-max query — ``qmax(ls,
+      r)`` maps (N, C, k) suffix starts and (N, C) window ends to suffix
+      maxima of ``csm``, so the backend is pluggable: the scheduling-epoch
+      program answers through the doubling sparse table (O(k log L) per
+      re-probe), the sweep program through a masked reverse running max of
+      the carried sums (no (N, P, L) table in its scan carry).  Identical
+      maxima either way, and ``max(csm) + v_j > budget`` equals
+      ``any(cs + v_j > budget)`` exactly: float addition of a shared addend
+      is monotone, so the max element alone decides.
+
+    Every count the probe needs — own-probe positions, window ends, window
+    starts and per-segment suffix starts — runs through ONE binary-lifting
+    pass with per-query (offset, threshold, strictness) parameters: the
+    counts are bit-identical to four separate ``_count_sorted`` calls (same
+    bisection, same predicate values at every step), but on CPU the fused
+    pass costs one O(log L) op chain instead of four.
+    """
+    N, L = tl_t.shape
+    k = b.shape[0]
+    C = cc.shape[0]
+    end = cc + pd  # (C,)
+    dur_eff = end - cc  # the scalar's ``end - start`` (not ``pd``)
+    p_sw = jnp.nextafter(cc[:, None] + b[None, :], jnp.inf)  # (C, k)
+    own_p = jnp.concatenate([cc[:, None], p_sw], axis=1)  # (C, k+1)
+    own_ok = jnp.concatenate(
+        [jnp.ones((C, 1), bool), (b[None, :] < dur_eff[:, None]) & (p_sw < end[:, None])],
+        axis=1,
+    )
+    offs = own_p - cc[:, None]
+    oidx = jnp.minimum(jnp.sum(b[None, None, :] < offs[:, :, None], axis=2), k - 1)
+    cand_own = v[oidx]  # alloc.at at own probes (C, k+1)
+    # one lifting pass for all counts: queries are "#(t - off <= thr)"
+    # (strict ``<`` for the right-open window ends) — the offset-then-compare
+    # form every original predicate already had (off = 0 where it subtracted
+    # nothing; IEEE ``t - 0.0`` is exact)
+    n_own, n_lj = C * (k + 1), C * (k - 1) if k > 1 else 0
+    zero_c = jnp.zeros((C,), cc.dtype)
+    thr = [own_p.reshape(-1), end, cc]
+    off = [jnp.zeros((n_own,), cc.dtype), zero_c, zero_c]
+    if k > 1:
+        thr.append(jnp.broadcast_to(b[None, : k - 1], (C, k - 1)).reshape(-1))
+        off.append(jnp.broadcast_to(cc[:, None], (C, k - 1)).reshape(-1))
+    thr_q = jnp.concatenate(thr)[None, :]
+    off_q = jnp.concatenate(off)[None, :]
+    strict = np.zeros(n_own + 2 * C + n_lj, bool)
+    strict[n_own : n_own + C] = True  # window ends: t < end
+    strict_q = jnp.asarray(strict)[None, :]
+    cnt_all = _count_sorted(
+        tl_t,
+        lambda t: jnp.where(strict_q, t - off_q < thr_q, t - off_q <= thr_q),
+        (N, n_own + 2 * C + n_lj),
+    )
+    cnt = cnt_all[:, :n_own]
+    r_win = cnt_all[:, n_own : n_own + C]
+    l0 = cnt_all[:, n_own + C : n_own + 2 * C]
+    cs0 = jnp.concatenate([base0[:, None], csm], axis=1)
+    prof_own = jnp.take_along_axis(cs0, cnt, axis=1).reshape(N, C, k + 1)
+    over = jnp.any(
+        own_ok[None, :, :] & (prof_own + cand_own[None, :, :] > budget), axis=2
+    )  # (N, C)
+    # in-window event suffixes: [l_j, r) index ranges per (clock, segment)
+    if k > 1:
+        lj = cnt_all[:, n_own + 2 * C :]
+        ls = jnp.concatenate([l0[:, :, None], lj.reshape(N, C, k - 1)], axis=2)
+    else:
+        ls = l0[:, :, None]  # (N, C, k)
+    m = qmax(ls, r_win)  # (N, C, k) suffix maxima over [l_j, r)
+    over_ev = jnp.any(m + v[None, None, :] > budget, axis=2)
+    fit = ~(over | over_ev)
+    if nmask is not None:
+        fit &= nmask[:, None]
+    return fit.T  # (C, N)
+
+
+def _suffix_max_query(csm, ls, r):
+    """The table-free ``qmax`` backend: suffix maxima of ``csm`` over the
+    windows [l_j, r) from one masked reverse running max per clock.
+
+    ``rm[i] = max(csm[i:r])`` (elements at or past ``r`` masked to -inf), so
+    the window max is a single gather at ``l_j`` — identical maxima to the
+    sparse-table read over the same index range (max is associative with
+    -inf identity), with O(N C L) streamed data and no carried table.
+    """
+    N, L = csm.shape
+    C = r.shape[1]
+    inwin = jnp.arange(L)[None, None, :] < r[:, :, None]  # (N, C, L)
+    rm = jax.lax.cummax(
+        jnp.where(inwin, csm[:, None, :], -jnp.inf), axis=2, reverse=True
+    )
+    g = jnp.take_along_axis(rm, jnp.minimum(ls, L - 1), axis=2)
+    return jnp.where(ls < r[:, :, None], g, -jnp.inf)
 
 
 @functools.lru_cache(maxsize=None)
@@ -319,7 +504,7 @@ def first_fit_window(
     use_shared = n_shared * (k + 3 * N) <= n_pernode * (2 * k + 2) * N
     if use_shared:
         P = shared_probe_set(csw, *evs)
-        Pp = bucket_size(len(P), floor=128)
+        Pp = fine_bucket(len(P), floor=128)
         prof = np.zeros((N, Pp))
         for n, (t, c) in enumerate(profiles):
             prof[n, : len(P)] = c[np.searchsorted(t, P, side="right")]
@@ -327,7 +512,7 @@ def first_fit_window(
         program = _window_program_shared(N)
     else:
         pns = [shared_probe_set(csw, e) for e in evs]
-        Pp = bucket_size(max(len(p) for p in pns), floor=128)
+        Pp = fine_bucket(max(len(p) for p in pns), floor=128)
         P = np.full((N, Pp), np.inf)
         prof = np.zeros((N, Pp))
         for n, ((t, c), pn) in enumerate(zip(profiles, pns)):
@@ -404,57 +589,26 @@ def _schedule_program(tl_t, tl_d, base0, ev, h0, now0, bnd, val, run, pdur, vali
     # it only guards larger callers.
     CAP = max(2, min(W, 8))
 
+    log2_tbl = jnp.asarray(_floor_log2_table(L))
+
     def row_step(carry, x):
         now, tl_t, tl_d, ev, pops, waited, blocked, cnts, dead_any = carry
         b, v, dur, pd, ok, ridx = x
         # The profile is frozen while a row waits (nothing commits until it
-        # places), so the running sums are computed once per row.
-        cs = base0[:, None] + jnp.cumsum(tl_d, axis=1)  # demand after event i (N, L)
-        cs0 = jnp.concatenate([base0[:, None], cs], axis=1)
-        # positions that are last in their tie group: probes must read the
-        # sum after ALL events tied at an instant, never a partial mid-tie
-        # sum (inf padding compares equal to itself and is masked out).
-        tie_last = jnp.concatenate(
-            [tl_t[:, :-1] != tl_t[:, 1:], jnp.isfinite(tl_t[:, -1:])], axis=1
-        )
+        # places), so the running sums and the range-max table are built once
+        # per row; every fit probe — the first try and each in-program wait
+        # re-probe — is then O(k log L) sparse-table lookups.
+        csm, tbl = _fit_tables(tl_t, tl_d, base0)
+
+        def qmax(ls, r):
+            N = tl_t.shape[0]
+            r_q = jnp.broadcast_to(r[:, :, None], ls.shape)
+            return _range_max_query(
+                tbl, log2_tbl, ls.reshape(N, -1), r_q.reshape(N, -1)
+            ).reshape(ls.shape)
 
         def fit_many(cc):
-            """(C, N) fit masks of the row at clocks ``cc`` (C,) — the exact
-            probe expressions of the scalar ``demand_exceeds`` over the
-            full-duration window [c, c + pdur), every clock at once."""
-            C = cc.shape[0]
-            end = cc + pd  # (C,)
-            dur_eff = end - cc  # the scalar's ``end - start`` (not ``pd``)
-            p_sw = jnp.nextafter(cc[:, None] + b[None, :], jnp.inf)  # (C, k)
-            own_p = jnp.concatenate([cc[:, None], p_sw], axis=1)  # (C, k+1)
-            own_ok = jnp.concatenate(
-                [jnp.ones((C, 1), bool), (b[None, :] < dur_eff[:, None]) & (p_sw < end[:, None])],
-                axis=1,
-            )
-            offs = own_p - cc[:, None]
-            oidx = jnp.minimum(jnp.sum(b[None, None, :] < offs[:, :, None], axis=2), k - 1)
-            cand_own = v[oidx]  # alloc.at at own probes (C, k+1)
-            flat_p = own_p.reshape(-1)  # (C*(k+1),)
-            cnt = jnp.sum(tl_t[:, None, :] <= flat_p[None, :, None], axis=2)  # (N, C*(k+1))
-            prof_own = jnp.take_along_axis(cs0, cnt, axis=1).reshape(N, C, k + 1)
-            over = jnp.any(
-                own_ok[None, :, :] & (prof_own + cand_own[None, :, :] > budget), axis=2
-            )  # (N, C)
-            # profile events strictly inside each right-open window.  The
-            # candidate's value at an event offset is v[#(b < off)] with v
-            # non-decreasing, so "demand + value-at-offset exceeds" unrolls
-            # into k fused passes — exists j <= #(b < off) with cs + v_j >
-            # budget (float-safe: rounding is monotone in the addend) —
-            # avoiding the (N, C, L) index gather.
-            m_ev = (tl_t[:, None, :] > cc[None, :, None]) & (tl_t[:, None, :] < end[None, :, None])
-            m_ev &= tie_last[:, None, :]
-            eoffs = tl_t[:, None, :] - cc[None, :, None]  # (N, C, L)
-            over_ev = jnp.any(m_ev & (cs[:, None, :] + v[0] > budget), axis=2)
-            for j in range(1, k):
-                over_ev |= jnp.any(
-                    m_ev & (eoffs > b[j - 1]) & (cs[:, None, :] + v[j] > budget), axis=2
-                )
-            return ~(over | over_ev).T  # (C, N)
+            return _fit_probes(tl_t, csm, qmax, base0, b, v, pd, budget, cc)
 
         fit0 = fit_many(now[None])[0]  # (N,)
         found0 = jnp.any(fit0)
@@ -615,7 +769,7 @@ def schedule_epoch(
     e0 = max((len(t) - c for (t, _), c in zip(node_events, cuts)), default=0)
     # capacity for one node's in-epoch commits (the program's CAP; beyond it
     # the epoch aborts and the host re-dispatches with fresh timelines)
-    L = bucket_size(e0 + max(2, min(Wb, 8)) * (k + 2), floor=64)
+    L = fine_bucket(e0 + max(2, min(Wb, 8)) * (k + 2), floor=64)
     tl_t = np.full((N, L), np.inf)
     tl_d = np.zeros((N, L))
     for n, ((t, d), c) in enumerate(zip(node_events, cuts)):
@@ -652,3 +806,340 @@ def schedule_epoch(
             int(waited),
             bool(dead),
         )
+
+
+# ---------------------------------------------------------------------------
+# The sweep program: every simulation lane of a policy x capacity design
+# space scheduled end to end in ONE vmapped dispatch.
+# ---------------------------------------------------------------------------
+
+_SWEEP_W = 8  # rows per fold chunk (the wait-window cadence of the driver)
+_SWEEP_CH = 8  # pending completions probed per wait iteration
+
+
+def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
+    """One simulation lane scheduled end to end (vmapped over lanes).
+
+    The whole-lane generalization of ``_schedule_program``: a nested scan
+    walks ALL attempt rows with the event clock, the per-node timelines, the
+    release heap and the tie-masked running demand sums in the carry, so the
+    host never re-dispatches between windows.  Structure:
+
+    * outer scan (chunks of ``_SWEEP_W`` rows) — folds events at or before
+      the clock into each node's base demand and compacts the timeline
+      buffers (the in-program twin of the host fold ``schedule_epoch`` does
+      between epochs), then rebuilds the running demand sums.
+    * inner scan (rows, unrolled) — the ``_find_slot`` semantics of
+      ``_schedule_program``: every probe (the unblocked clock probe and the
+      CH x k suffix windows of each wait re-probe) runs ``_fit_probes`` with
+      the table-free ``_suffix_max_query`` backend over the carried sums.
+      The scheduling-epoch program carries the doubling sparse table instead
+      (O(k log E) lookups amortized over many windows per host dispatch);
+      here the whole (N, P, L) table would live in the row-scan carry, and
+      on a bandwidth-bound host the per-row table rewrites plus the
+      while-loop captures of it cost several times the streamed running max
+      it replaces.  Commits refresh the sums for the placed node only, as
+      masked single-node writes (a lax.cond would batch into whole-carry
+      selects under the lane vmap, copying the carry twice per row).  The
+      row scan is unrolled: each step is many small (N, ...) vector ops, so
+      on CPU the scan bookkeeping dominates an un-unrolled body.
+
+    Per-lane node counts are handled by ``nmask`` (invalid nodes never fit);
+    rows are +inf/False padded to the lane grid's shared shape.  ``overflow``
+    reports a node timeline outgrowing L — the commits' ``mode="drop"``
+    splices silently lose events past it, so the host re-dispatches with a
+    doubled axis.  ``dead`` is a drained heap with no fit (unreachable for
+    node-capped allocations; the host falls back to the per-policy engine
+    for that lane); once dead every later row returns unplaced.  Returns
+    per-row (placed, node, start) plus the final (clock, pops, waited,
+    dead, overflow).
+    """
+    R, k = bnd.shape
+    N = nmask.shape[0]
+    W, CH = _SWEEP_W, _SWEEP_CH
+    dt = bnd.dtype
+
+    def chunk_step(carry, xs):
+        now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any = carry
+        # Fold events at or before the clock into each node's base demand
+        # (the in-program twin of ``schedule_epoch``'s host-side cut): every
+        # later probe is at or after ``now``, so the folded prefix only ever
+        # enters as its cumulative sum, and compacting keeps the timeline
+        # axis sized by *future* events.
+        nowq = jnp.broadcast_to(now, (N, 1))
+        cnt = _count_sorted(tl_t, lambda t: t <= nowq, (N, 1))
+        gain = jnp.take_along_axis(jnp.cumsum(tl_d, axis=1), jnp.maximum(cnt - 1, 0), axis=1)
+        base = base + jnp.where(cnt > 0, gain, 0.0)[:, 0]
+        idx = jnp.arange(L)[None, :] + cnt
+        keep = idx < L
+        idxc = jnp.minimum(idx, L - 1)
+        tl_t = jnp.where(keep, jnp.take_along_axis(tl_t, idxc, axis=1), jnp.inf)
+        tl_d = jnp.where(keep, jnp.take_along_axis(tl_d, idxc, axis=1), 0.0)
+        csm0 = jnp.where(
+            _tie_last(tl_t), base[:, None] + jnp.cumsum(tl_d, axis=1), -jnp.inf
+        )
+
+        def row_step(icarry, x):
+            now, tl_t, tl_d, csm, ev, pops, waited, dead_any, over_any = icarry
+            b, v, dur, pd, ok, ridx = x
+
+            def fit_many(cc):
+                return _fit_probes(
+                    tl_t, csm, functools.partial(_suffix_max_query, csm),
+                    base, b, v, pd, budget, cc, nmask,
+                )
+
+            # unblocked fast path: one clock probed against the carried sums
+            fit0 = fit_many(now[None])[0]
+            found0 = jnp.any(fit0)
+            node0 = jnp.argmax(fit0).astype(jnp.int32)
+
+            def wcond(s):
+                _, _, _, found, _, dead = s
+                return ok & ~dead_any & ~found & ~dead
+
+            def wbody(s):
+                t, ev_, p_, _, _, _ = s
+                # pop up to CH earliest pending completions in one probe —
+                # identical chunked-pop semantics to ``_schedule_program``
+                neg, hidx = jax.lax.top_k(-ev_, CH)
+                tt = -neg
+                fin = jnp.isfinite(tt)
+                cc = jnp.maximum(t, tt)
+                F = fit_many(jnp.where(fin, cc, t)) & fin[:, None]  # (CH, N)
+                anyfit = jnp.any(F, axis=1)
+                hit = jnp.any(anyfit)
+                i = jnp.argmax(anyfit)
+                npop = jnp.where(hit, i + 1, jnp.sum(fin)).astype(jnp.int32)
+                ev2 = ev_.at[hidx].set(jnp.where(jnp.arange(CH) < npop, jnp.inf, tt))
+                last = jnp.maximum(npop - 1, 0)
+                t2 = jnp.where(hit, cc[i], jnp.where(npop > 0, cc[last], t))
+                node2 = jnp.argmax(F[i]).astype(jnp.int32)
+                return (t2, ev2, p_ + npop, hit, node2, ~hit & (npop == 0))
+
+            init = (now, ev, jnp.zeros((), jnp.int32), found0, node0, jnp.asarray(False))
+            t_f, ev_f, row_pops, found, node, dead = jax.lax.while_loop(wcond, wbody, init)
+            ran = ok & ~dead_any
+            placed = found & ran
+            end = t_f + dur
+            live = jnp.isfinite(b) & (t_f + b < end)
+            n_fin = jnp.sum(jnp.isfinite(tl_t[node]))
+            over_loc = placed & (n_fin + 2 + jnp.sum(live) > L)
+
+            # the row's ~k+2 events spliced side="right" — byte-for-byte the
+            # commit of ``_schedule_program``.  Computed unconditionally on
+            # the placed node's (L,) slices and written back under a
+            # ``placed`` mask: a lax.cond here would batch (under the lane
+            # vmap) into a select over the whole (N, L) carry, copying it
+            # twice per row — masked single-node writes keep the per-row
+            # carry traffic at O(k L) and let XLA update the scan carry in
+            # place.
+            sw = jnp.nextafter(t_f + b, jnp.inf)
+            steps = jnp.concatenate([jnp.diff(v), jnp.zeros((1,), v.dtype)])
+            vext = jnp.concatenate([v, v[-1:]])
+            v_end = vext[jnp.sum(live)]
+            t_new = jnp.concatenate([t_f[None], jnp.where(live, sw, jnp.inf), end[None]])
+            d_new = jnp.concatenate([v[:1], jnp.where(live, steps, 0.0), -v_end[None]])
+            order = jnp.argsort(t_new, stable=True)
+            t_new, d_new = t_new[order], d_new[order]
+            tn, dn = tl_t[node], tl_d[node]
+            pos_new = jnp.sum(tn[None, :] <= t_new[:, None], axis=1) + jnp.arange(k + 2)
+            old_tgt = jnp.arange(L) + jnp.sum(t_new[None, :] < tn[:, None], axis=1)
+            t2 = (
+                jnp.full((L,), jnp.inf, tn.dtype)
+                .at[old_tgt].set(tn, mode="drop")
+                .at[pos_new].set(t_new, mode="drop")
+            )
+            d2 = (
+                jnp.zeros((L,), dn.dtype)
+                .at[old_tgt].set(dn, mode="drop")
+                .at[pos_new].set(d_new, mode="drop")
+            )
+            # probe state refresh for the placed node only: one O(L) running
+            # sum (tie-masked in place) instead of an all-nodes rebuild
+            tie_n = jnp.concatenate([t2[:-1] != t2[1:], jnp.isfinite(t2[-1:])])
+            csm_n = jnp.where(tie_n, base[node] + jnp.cumsum(d2), -jnp.inf)
+            tl_t2 = tl_t.at[node].set(jnp.where(placed, t2, tn))
+            tl_d2 = tl_d.at[node].set(jnp.where(placed, d2, dn))
+            csm2 = csm.at[node].set(jnp.where(placed, csm_n, csm[node]))
+            ev2 = ev_f.at[ridx].set(jnp.where(placed, end, ev_f[ridx]))
+            # a dead row keeps its pops and clock — the oracle consumed those
+            # events before discovering the heap was dry (the lane is handed
+            # to the fallback engine anyway)
+            keep_s = placed | (ran & dead)
+            icarry = (
+                jnp.where(keep_s, t_f, now),
+                tl_t2,
+                tl_d2,
+                csm2,
+                jnp.where(keep_s, ev2, ev),
+                pops + row_pops,
+                waited + (placed & (row_pops > 0)).astype(jnp.int32),
+                dead_any | (ran & dead),
+                over_any | over_loc,
+            )
+            return icarry, (placed, node, t_f)
+
+        inner = (now, tl_t, tl_d, csm0, ev, pops, waited, dead_any, over_any)
+        (now, tl_t, tl_d, _, ev, pops, waited, dead_any, over_any), outs = jax.lax.scan(
+            row_step, inner, xs, unroll=W
+        )
+        return (now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any), outs
+
+    xs = (
+        bnd.reshape(R // W, W, k),
+        val.reshape(R // W, W, k),
+        run.reshape(R // W, W),
+        pdur.reshape(R // W, W),
+        valid.reshape(R // W, W),
+        jnp.arange(R, dtype=jnp.int32).reshape(R // W, W),
+    )
+    init = (
+        jnp.zeros((), dt),  # the lane's cluster starts empty at clock 0
+        jnp.zeros((N,), dt),
+        jnp.full((N, L), jnp.inf, dt),
+        jnp.zeros((N, L), dt),
+        jnp.full((R,), jnp.inf, dt),  # release heap: one slot per row
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.asarray(False),
+        jnp.asarray(False),
+    )
+    (now_f, _, _, _, _, pops, waited, dead, over), (placed, node, start) = jax.lax.scan(
+        chunk_step, init, xs
+    )
+    return (
+        placed.reshape(R),
+        node.reshape(R),
+        start.reshape(R),
+        now_f,
+        pops,
+        waited,
+        dead,
+        over,
+    )
+
+
+# Timeline-axis hint per padded grid signature: a grid that needed an
+# overflow-doubled axis starts the next dispatch there, so warm calls are a
+# single dispatch instead of re-walking the doubling ladder every time.
+_SWEEP_L_HINT: dict[tuple, int] = {}
+
+
+def _row_bucket(n: int) -> int:
+    """Static row-axis bucket with eighth-of-a-power-of-two granularity.
+
+    The sweep scan pays full per-row cost for padding rows (their probes and
+    masked commits still execute), so the usual power-of-two bucket wastes up
+    to half the scan on dead rows — e.g. a 1.1k-row lane padding to 2048.
+    Eighth-steps (1024, 1280, 1536, 1792, 2048, ...) cap the waste at 12.5%
+    for a handful of extra compiled variants, each a multiple of the
+    ``_SWEEP_W`` fold cadence."""
+    p = bucket_size(n, floor=8 * _SWEEP_W)
+    for eighths in (4, 5, 6, 7):
+        c = p * eighths // 8
+        if c >= n and c % _SWEEP_W == 0:
+            return c
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def _sweep_program(bnd, val, run, pdur, valid, nmask, budget, *, L):
+    """All lanes at once: ``_sweep_lane`` vmapped over the leading lane axis
+    (policy x node-count x corpus design points share one compiled program
+    per padded shape bucket)."""
+    return jax.vmap(functools.partial(_sweep_lane, L=L))(
+        bnd, val, run, pdur, valid, nmask, budget
+    )
+
+
+def sweep_schedule(
+    lane_rows: list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]],
+    lane_nodes: list[int],
+    lane_budgets: list[float],
+    *,
+    timeline_floor: int = 256,
+    timeline_cap: int = 8192,
+    stats: dict | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Schedule every lane of a design space in one vmapped dispatch.
+
+    Args:
+      lane_rows: per lane, ``(bnd (r, k), val (r, k), run (r,), probe (r,))``
+        attempt rows in queue order (``_policy_rows`` layout: values already
+        node-capped, run = occupancy, probe = fit-check duration).
+      lane_nodes: per lane, its cluster's node count (lanes may differ; the
+        program masks nodes past each lane's count).
+      lane_budgets: per lane, the fits budget (capacity + eps).
+      timeline_floor/timeline_cap: initial / maximal per-node timeline axis.
+        A lane whose concurrent future events outgrow the axis flags
+        overflow and the whole grid re-dispatches with the axis doubled
+        (each axis size is its own compiled variant, so the floor is chosen
+        generously); a lane still overflowing at the cap is reported dead.
+      stats: optional ``{"program_calls", "program_wall_s",
+        "waits_program"}`` accumulator (the bench's counters).
+
+    Rows are padded to a shared ``(S, R, k)`` grid: row axes with +inf
+    boundaries / False valid, segment axes hold-last (padded segments have
+    +inf boundaries, so they never fire a switch and their suffix windows
+    are empty).  Returns ``(node (S, R), start (S, R), pops (S,),
+    waited (S,), dead (S,))``; rows of a dead lane are undefined — the
+    caller replays that lane through the per-policy windows engine.
+    """
+    S = len(lane_rows)
+    rmax = max((b.shape[0] for b, _, _, _ in lane_rows), default=1)
+    R = _row_bucket(max(rmax, 1))
+    kmax = max(b.shape[1] for b, _, _, _ in lane_rows)
+    N = max(lane_nodes)
+    bnd = np.full((S, R, kmax), np.inf)
+    val = np.zeros((S, R, kmax))
+    run = np.zeros((S, R))
+    pdur = np.zeros((S, R))
+    valid = np.zeros((S, R), dtype=bool)
+    nmask = np.zeros((S, N), dtype=bool)
+    for s, ((b, v, rr, pr), nn) in enumerate(zip(lane_rows, lane_nodes)):
+        r, k = b.shape
+        bnd[s, :r, :k] = b
+        val[s, :r, :k] = v
+        if k < kmax:
+            val[s, :r, k:] = v[:, -1:]
+        run[s, :r] = rr
+        pdur[s, :r] = pr
+        valid[s, :r] = True
+        nmask[s, :nn] = True
+    budget = np.asarray(lane_budgets, dtype=np.float64)
+    hint_key = (S, R, kmax, N)
+    L = max(
+        bucket_size(_SWEEP_W * (kmax + 2), floor=timeline_floor),
+        min(_SWEEP_L_HINT.get(hint_key, 0), timeline_cap),
+    )
+    with _x64_ctx():
+        while True:
+            t0 = time.perf_counter()
+            placed, node, start, _, pops, waited, dead, over = _sweep_program(
+                bnd, val, run, pdur, valid, nmask, budget, L=L
+            )
+            placed, dead, over = np.asarray(placed), np.asarray(dead), np.asarray(over)
+            if stats is not None:
+                stats["program_calls"] = stats.get("program_calls", 0) + 1
+                stats["program_wall_s"] = stats.get("program_wall_s", 0.0) + (
+                    time.perf_counter() - t0
+                )
+            if not over.any() or L >= timeline_cap:
+                break
+            L *= 2
+    _SWEEP_L_HINT[hint_key] = L
+    dead = dead | over  # still overflowing at the cap: replay on the fallback
+    for s, (b, _, _, _) in enumerate(lane_rows):
+        assert dead[s] or placed[s, : b.shape[0]].all(), f"lane {s}: unplaced rows"
+    if stats is not None:
+        stats["waits_program"] = stats.get("waits_program", 0) + int(
+            np.asarray(waited)[~dead].sum()
+        )
+    return (
+        np.asarray(node, dtype=np.int64),
+        np.asarray(start, dtype=np.float64),
+        np.asarray(pops, dtype=np.int64),
+        np.asarray(waited, dtype=np.int64),
+        dead,
+    )

@@ -79,6 +79,20 @@ def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval
     return bounds, jnp.maximum(v, floor_mib)
 
 
+def _acc_dtype(dt):
+    """Wastage accumulation dtype: float64 whenever an x64 context is live,
+    regardless of the ladder's working dtype.
+
+    Outcome decisions (failure index, retries) stay in the working dtype —
+    they must keep matching the f32 predictions bit-for-bit — but wastage is
+    a *report*, summed over every sample of every attempt: accumulating the
+    f32 ladder's per-sample terms in f32 loses ~3 decimal digits over a
+    cluster corpus against the float64 numpy scorer (``score_attempt_np``
+    casts to float64 first).  Resolved at trace time, so the flag is part of
+    the jit cache key."""
+    return jnp.float64 if jax.config.jax_enable_x64 else dt
+
+
 def _attempt(y, length, interval_s, bounds, values):
     """Single-row attempt scorer (same semantics as core.allocation)."""
     T = y.shape[0]
@@ -90,8 +104,11 @@ def _attempt(y, length, interval_s, bounds, values):
     failed = jnp.any(over)
     fail_idx = jnp.where(failed, jnp.argmax(over), T + 1)
     pos = jnp.arange(T)
-    succ_w = jnp.sum(jnp.where(valid, a - y, 0.0))
-    fail_w = jnp.sum(jnp.where((pos <= fail_idx) & valid, a, 0.0))
+    adt = _acc_dtype(y.dtype)
+    a_acc, y_acc = a.astype(adt), y.astype(adt)
+    zero = jnp.asarray(0.0, adt)
+    succ_w = jnp.sum(jnp.where(valid, a_acc - y_acc, zero))
+    fail_w = jnp.sum(jnp.where((pos <= fail_idx) & valid, a_acc, zero))
     waste = jnp.where(failed, fail_w, succ_w) * interval_s / MIB_PER_GIB
     return failed, fail_idx, waste
 
@@ -150,12 +167,13 @@ def _replay_multi(
             done = done | (rec[3] >= max_attempts)  # ladder buffer full
         return done, retries, waste, vals, rec
 
+    adt = _acc_dtype(values.dtype)  # wastage buffers follow the accumulator
     rec0 = ()
     if record:
         rec0 = (
             jnp.zeros((M, max_attempts, k), values.dtype),
             jnp.full((M, max_attempts), -1, jnp.int32),
-            jnp.zeros((M, max_attempts), values.dtype),
+            jnp.zeros((M, max_attempts), adt),
             jnp.zeros((M,), jnp.int32),
         )
     _, retries, waste, _, rec = jax.lax.while_loop(
@@ -164,7 +182,7 @@ def _replay_multi(
         (
             jnp.zeros((M,), bool),
             jnp.zeros((M,), jnp.int32),
-            jnp.zeros((M,), values.dtype),
+            jnp.zeros((M,), adt),
             jnp.minimum(values, cap_mib),
             rec0,
         ),

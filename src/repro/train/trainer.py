@@ -61,7 +61,12 @@ class Trainer:
         self.predictor = MemoryPredictorService(method="ksegments-selective")
         self.straggler = StragglerDetector()
         self.ckpt = AsyncCheckpointer(self.tc.checkpoint_dir)
-        self._step_fn = jax.jit(make_train_step(cfg, self.train_cfg), donate_argnums=(0,))
+        # Donate the state only off-CPU: on jax 0.4.37's XLA:CPU, running a
+        # donated-buffer executable in a process with the persistent
+        # compilation cache enabled corrupts the heap (later unrelated numpy
+        # calls segfault/abort), and CPU gains nothing from donation anyway.
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._step_fn = jax.jit(make_train_step(cfg, self.train_cfg), donate_argnums=donate)
         self.metrics_log: list[dict] = []
 
     # -- state ------------------------------------------------------------

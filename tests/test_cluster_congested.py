@@ -25,10 +25,15 @@ POLICIES = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
 
 
 def _assert_congested_parity(wfs, policies, min_waits: int, **kw):
-    """Exact per-attempt parity + the wait-path invariants."""
+    """Exact per-attempt parity + the wait-path invariants.
+
+    Pinned to ``placement="windows"``: these corpora stress the epoch
+    program's carry hand-off between windows dispatches, which the
+    whole-run sweep engine (tests/test_cluster_sweep.py) never takes.
+    """
     cfg = KSegmentsConfig(error_mode="progressive")
     stats: dict = {}
-    batched = run_cluster_batched(wfs, policies, placement_stats=stats, **kw)
+    batched = run_cluster_batched(wfs, policies, placement_stats=stats, placement="windows", **kw)
     # the point of the corpus: placement must actually have waited, and every
     # wait must have been resolved inside the device program
     assert stats["waits_host"] == 0

@@ -1,0 +1,148 @@
+"""The lane-vmapped whole-run sweep engine vs the per-policy windows engine.
+
+``run_cluster_batched(placement="sweep")`` and ``run_cluster_sweep`` stack
+independent simulation lanes — policy x node-count x corpus design points —
+along a leading lane axis of ONE vmapped device program
+(``device_timeline.sweep_schedule``).  Every lane must reproduce the
+per-policy windows engine (itself oracle-exact, tests/test_cluster_*.py)
+attempt by attempt: exact (node, start, end), exact wait counts, zero
+host-resolved waits — including lanes with *unequal* node counts, which the
+program handles by masking nodes past each lane's count.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sim.cluster import (
+    pareto_frontier,
+    run_cluster_batched,
+    run_cluster_sweep,
+)
+from repro.sim.traces import generate_workflow
+
+POLICIES = ("default", "witt-lr", "ppm-improved", "ksegments-selective")
+
+# congested corpus: small nodes, long queue — placement is dominated by
+# in-program waits (the regime the sparse-table probes exist for)
+CONGESTED = dict(node_mib=24 * 1024.0, max_tasks_per_type=25, min_executions=6, train_frac=0.5)
+
+
+def _wfs(seed=7, name="eager", scale=0.25):
+    return [generate_workflow(name, seed=seed, scale=scale)]
+
+
+def _assert_equal_results(a, b):
+    assert a.tasks_run == b.tasks_run > 0
+    assert a.retries == b.retries
+    assert a.makespan_s == b.makespan_s
+    assert a.wastage_gib_s == b.wastage_gib_s  # bit-equal: shared ladders
+    for ra, rb in zip(a.records, b.records):
+        assert (ra.workflow, ra.task, ra.exec_index) == (rb.workflow, rb.task, rb.exec_index)
+        assert ra.attempts == rb.attempts
+        assert ra.placements == rb.placements  # exact (node, start, end)
+        assert ra.wastage_gib_s == rb.wastage_gib_s
+
+
+def test_sweep_matches_windows_congested():
+    """One dispatch for all policies on a congested corpus: >= 5 in-program
+    waits, zero host-resolved waits, exact per-attempt parity."""
+    wfs = _wfs()
+    st_s: dict = {}
+    st_w: dict = {}
+    sweep = run_cluster_batched(
+        wfs, POLICIES, n_nodes=2, placement="sweep", placement_stats=st_s, **CONGESTED
+    )
+    windows = run_cluster_batched(
+        wfs, POLICIES, n_nodes=2, placement="windows", placement_stats=st_w, **CONGESTED
+    )
+    assert st_s["waits_host"] == 0
+    assert st_s["waits_program"] >= 5
+    assert st_s["waits_program"] == st_w["waits_program"]
+    # the whole policy set resolved in one (warm) vmapped dispatch
+    assert st_s["program_calls"] == 1
+    for p in POLICIES:
+        _assert_equal_results(sweep[p], windows[p])
+
+
+def test_auto_routes_multi_policy_through_sweep():
+    wfs = _wfs(seed=3)
+    st_a: dict = {}
+    auto = run_cluster_batched(
+        wfs, POLICIES[:2], n_nodes=1, placement_stats=st_a, **CONGESTED
+    )
+    assert st_a["program_calls"] == 1  # sweep: one dispatch, not a window loop
+    windows = run_cluster_batched(wfs, POLICIES[:2], n_nodes=1, placement="windows", **CONGESTED)
+    for p in POLICIES[:2]:
+        _assert_equal_results(auto[p], windows[p])
+
+
+def test_lane_heterogeneity_unequal_node_counts():
+    """Lanes with different n_nodes in ONE dispatch must each match the
+    per-policy engine run at that node count exactly."""
+    wfs = _wfs()
+    node_counts = (1, 2, 3)
+    stats: dict = {}
+    kw = dict(CONGESTED, max_tasks_per_type=12)  # 9 lanes: keep the refs cheap
+    res = run_cluster_sweep(
+        wfs, POLICIES[:3], node_counts=node_counts, placement_stats=stats, **kw
+    )
+    assert stats["waits_host"] == 0
+    assert stats["waits_program"] >= 5
+    assert stats["program_calls"] == 1
+    for (corpus, policy, nn), r in res.items():
+        assert corpus == ""
+        ref = run_cluster_batched(
+            wfs, (policy,), n_nodes=nn, placement="windows", **kw
+        )[policy]
+        _assert_equal_results(r, ref)
+    # more nodes never lengthen the makespan on the same rows
+    for p in POLICIES[:3]:
+        spans = [res[("", p, nn)].makespan_s for nn in node_counts]
+        assert spans == sorted(spans, reverse=True)
+
+
+def test_sweep_multi_corpus_keys_and_pareto():
+    corpora = {"a": _wfs(seed=3), "b": _wfs(seed=7)}
+    res = run_cluster_sweep(
+        corpora, POLICIES[:2], node_counts=(1, 2), max_tasks_per_type=8,
+        node_mib=24 * 1024.0, min_executions=6, train_frac=0.5,
+    )
+    assert set(res) == {
+        (c, p, n) for c in corpora for p in POLICIES[:2] for n in (1, 2)
+    }
+    for c in corpora:
+        pts = [(r.makespan_s, r.wastage_gib_s) for k, r in sorted(res.items()) if k[0] == c]
+        keep = pareto_frontier(pts)
+        assert keep.any()
+        # frontier members are genuinely non-dominated
+        arr = np.asarray(pts)
+        for i in np.flatnonzero(keep):
+            dom = (arr <= arr[i]).all(axis=1) & (arr < arr[i]).any(axis=1)
+            assert not dom.any()
+
+
+def test_pareto_frontier_basics():
+    keep = pareto_frontier([(1.0, 3.0), (2.0, 2.0), (3.0, 1.0), (3.0, 3.0)])
+    assert keep.tolist() == [True, True, True, False]
+    # exact duplicates both survive (neither strictly dominates)
+    keep = pareto_frontier([(1.0, 1.0), (1.0, 1.0)])
+    assert keep.tolist() == [True, True]
+    with pytest.raises(ValueError):
+        pareto_frontier([1.0, 2.0])
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(6, 12))
+def test_property_sweep_windows_parity(seed, n_nodes, mtpt):
+    """Random congested corpora: sweep == windows, attempt by attempt."""
+    wfs = [generate_workflow("eager", seed=seed, scale=0.06)]
+    kw = dict(
+        n_nodes=n_nodes, node_mib=32 * 1024.0, max_tasks_per_type=mtpt,
+        min_executions=6, train_frac=0.5,
+    )
+    sweep = run_cluster_batched(wfs, ("default", "ksegments-selective"), placement="sweep", **kw)
+    windows = run_cluster_batched(wfs, ("default", "ksegments-selective"), placement="windows", **kw)
+    for p in sweep:
+        _assert_equal_results(sweep[p], windows[p])

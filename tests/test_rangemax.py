@@ -1,0 +1,144 @@
+"""Sparse-table range-max probes vs brute force.
+
+The scheduling programs' wait path answers "max cumulative demand over an
+event window" with two doubling-table lookups (``kernels.rangemax`` +
+``device_timeline._range_max_query``) and turns probe instants into index
+bounds with binary searches (``device_timeline._count_sorted``).  Both must
+be *decision-identical* to the dense per-event pass they replaced, so every
+check here is an exact (bitwise) comparison against a brute-force oracle:
+
+* every [l, r) window of random tables vs a naive ``max(x[l:r])`` scan,
+* probe counts at boundary-epsilon instants (exactly at an event time, one
+  ulp before, one ulp after — the ``nextafter`` switch instants the
+  programs actually probe),
+* the Pallas kernel (interpret mode) vs the jnp twin, bit for bit.
+
+Plus a hypothesis variant over random shapes (skip-shimmed by conftest when
+hypothesis is absent).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+from repro.kernels import rangemax
+from repro.kernels.ops import range_max_table
+from repro.sim.device_timeline import (
+    _count_sorted,
+    _floor_log2_table,
+    _range_max_query,
+    _x64_ctx,
+)
+
+
+def _brute_table(x: np.ndarray) -> np.ndarray:
+    """(B, L) -> (B, P, L) doubling table by definition."""
+    B, L = x.shape
+    P = rangemax.num_levels(L)
+    out = np.full((B, P, L), -np.inf)
+    for p in range(P):
+        span = 1 << p
+        for i in range(L):
+            out[:, p, i] = x[:, i : i + span].max(axis=1)
+    return out
+
+
+def _query_all_windows(tbl, x):
+    """Every [l, r) window answered by the two-lookup read vs naive max."""
+    N, _, L = tbl.shape
+    log2_tbl = jnp.asarray(_floor_log2_table(L))
+    ls, rs = np.meshgrid(np.arange(L + 1), np.arange(L + 1), indexing="ij")
+    ls, rs = ls.reshape(-1), rs.reshape(-1)
+    got = np.asarray(
+        _range_max_query(
+            jnp.asarray(tbl),
+            log2_tbl,
+            jnp.asarray(np.broadcast_to(ls, (N, len(ls)))),
+            jnp.asarray(np.broadcast_to(rs, (N, len(rs)))),
+        )
+    )
+    for q, (l, r) in enumerate(zip(ls, rs)):
+        want = x[:, l:r].max(axis=1) if r > l else np.full(x.shape[0], -np.inf)
+        np.testing.assert_array_equal(got[:, q], want, err_msg=f"window [{l}, {r})")
+
+
+def test_table_levels_match_brute_force():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(3, 37)).astype(np.float32)
+    x[0, 30:] = -np.inf  # padded tail, the programs' fill
+    tbl = np.asarray(rangemax.table_levels_jnp(jnp.asarray(x)))
+    np.testing.assert_array_equal(tbl, _brute_table(x).astype(np.float32))
+
+
+def test_every_window_exact():
+    rng = np.random.default_rng(1)
+    x = np.cumsum(rng.normal(size=(2, 19)), axis=1)  # cumulative-demand-like
+    with _x64_ctx():
+        tbl = np.asarray(range_max_table(jnp.asarray(x)))
+        _query_all_windows(tbl, x)
+
+
+def test_pallas_kernel_matches_jnp_twin():
+    rng = np.random.default_rng(2)
+    # tile-aligned and ragged shapes; ops.range_max_table pads the latter
+    for B, L in ((8, 128), (5, 37), (16, 300)):
+        x = rng.normal(size=(B, L)).astype(np.float32)
+        got = np.asarray(range_max_table(jnp.asarray(x), interpret=True))
+        want = np.asarray(rangemax.table_levels_jnp(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_count_sorted_boundary_epsilon():
+    """Counts at event instants, one ulp before and one ulp after — the
+    exact probe placements the scheduling programs use."""
+    rng = np.random.default_rng(3)
+    with _x64_ctx():
+        t = np.sort(rng.uniform(0.0, 100.0, size=11))
+        t[7] = t[6]  # tied event instants
+        tl = np.full((1, 16), np.inf)
+        tl[0, : len(t)] = t
+        probes = np.concatenate(
+            [t, np.nextafter(t, -np.inf), np.nextafter(t, np.inf), [-1.0, 1e9]]
+        )
+        q = np.broadcast_to(probes, (1, len(probes)))
+        got_le = np.asarray(_count_sorted(jnp.asarray(tl), lambda v: v <= jnp.asarray(q), (1, len(probes))))
+        got_lt = np.asarray(_count_sorted(jnp.asarray(tl), lambda v: v < jnp.asarray(q), (1, len(probes))))
+        np.testing.assert_array_equal(got_le[0], np.searchsorted(t, probes, side="right"))
+        np.testing.assert_array_equal(got_lt[0], np.searchsorted(t, probes, side="left"))
+
+
+def test_count_sorted_offset_predicate():
+    """The wait path's segment predicate ``(t - c) <= b`` bisects on the
+    subtract-then-compare form — it must equal the dense compare-count of
+    the SAME expression (not of ``t <= c + b``, which rounds differently)."""
+    rng = np.random.default_rng(4)
+    with _x64_ctx():
+        t = np.sort(rng.uniform(0.0, 50.0, size=13))
+        tl = np.full((1, 16), np.inf)
+        tl[0, : len(t)] = t
+        for c, b in [(t[4], 7.3), (0.1, 1e-9), (t[0], 0.0)]:
+            pred = lambda v: (v - c) <= b  # noqa: E731
+            got = int(np.asarray(_count_sorted(jnp.asarray(tl), pred, (1, 1)))[0, 0])
+            tp = np.concatenate([t, np.full(16 - len(t), np.inf)])
+            want = int(np.sum((tp - c) <= b))
+            assert got == want, (c, b)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 4))
+def test_property_windows_exact(seed, L, B):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(B, L)) * rng.choice([1.0, 1e6])
+    x[rng.random(size=x.shape) < 0.2] = -np.inf  # masked mid-tie positions
+    with _x64_ctx():
+        tbl = np.asarray(range_max_table(jnp.asarray(x)))
+        _query_all_windows(tbl, x)
+
+
+@pytest.mark.parametrize("L", [1, 2, 3, 8, 100])
+def test_num_levels_covers_all_windows(L):
+    P = rangemax.num_levels(L)
+    # the longest window (length L) must be answerable: floor(log2(L)) < P
+    assert (1 << (P - 1)) <= L < (1 << P)
