@@ -107,6 +107,35 @@ SWEEP = False
 # events; benches snapshot it around cold/warm sections.
 COMPILE_CACHE_DIR: str | None = None
 _CACHE_HITS = [0]
+# Retrace audit (repro.analysis.trace_audit): warm bench iterations must hit
+# the in-process jit cache — 0 retraces, 0 backend compiles — or the padding
+# contract (fine_bucket/pad_rows bucket shapes) has regressed.  The cluster
+# variants FAIL the run on a warm retrace; REPRO_AUDIT_RETRACE=0 downgrades
+# the gate to record-only (the counts still land in the JSON payloads).
+AUDIT_RETRACE = os.environ.get("REPRO_AUDIT_RETRACE", "1").lower() not in ("", "0", "off")
+
+
+def _audit_counter():
+    """A CompileCounter context, started fresh around one warm section."""
+    from repro.analysis.trace_audit import CompileCounter
+
+    return CompileCounter()
+
+
+def _audit_payload(cc, name: str, enforce: bool) -> dict:
+    """JSON fragment for one audited warm section; fails the run on a warm
+    retrace when the gate is enforced."""
+    if enforce and AUDIT_RETRACE and (cc.traces or cc.compiles):
+        _fail(
+            f"{name}: warm iterations retraced ({cc.traces} trace(s), "
+            f"{cc.compiles} backend compile(s)) — a shape fell off the "
+            "fine_bucket/pad_rows padding contract"
+        )
+    return {
+        "warm_traces": cc.traces,
+        "warm_compiles": cc.compiles,
+        "enforced": bool(enforce and AUDIT_RETRACE),
+    }
 
 
 def _enable_compile_cache() -> None:
@@ -505,13 +534,18 @@ def bench_serve() -> None:
 
     _round(bc, True)  # jit warmup
     us = {}
-    for name, ctl, batched in (("scalar", sc, False), ("batched", bc, True)):
-        t0 = time.time()
-        n = 0
-        while time.time() - t0 < 1.0:
-            _round(ctl, batched)
-            n += 1
-        us[name] = (time.time() - t0) * 1e6 / (n * batch)
+    # record-only retrace audit on the warm microbench loop (the admission
+    # probe-set bucket may legitimately step when residency churns, so this
+    # path logs instead of gating — the cluster variants enforce)
+    with _audit_counter() as cc:
+        for name, ctl, batched in (("scalar", sc, False), ("batched", bc, True)):
+            t0 = time.time()
+            n = 0
+            while time.time() - t0 < 1.0:
+                _round(ctl, batched)
+                n += 1
+            us[name] = (time.time() - t0) * 1e6 / (n * batch)
+    retrace_audit = _audit_payload(cc, "serve/microbench", enforce=False)
     speedup = us["scalar"] / us["batched"]
     _row(
         "serve/microbench",
@@ -529,6 +563,7 @@ def bench_serve() -> None:
             "scalar_us_per_decision": round(us["scalar"], 2),
             "batched_us_per_decision": round(us["batched"], 2),
             "speedup": round(speedup, 2),
+            "retrace_audit": retrace_audit,
         },
     }
     with open(SERVE_JSON, "w") as f:
@@ -558,13 +593,15 @@ def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
     place_stats: dict = {}
     res_b: dict = {}
     hits1 = _CACHE_HITS[0]
-    for _ in range(2):
-        stats_i: dict = {}
-        t0 = time.time()
-        res_b = run_cluster_batched(wfs, policies, placement_stats=stats_i, **kw)
-        if time.time() - t0 < warm:
-            warm, place_stats = time.time() - t0, stats_i
+    with _audit_counter() as cc:
+        for _ in range(2):
+            stats_i: dict = {}
+            t0 = time.time()
+            res_b = run_cluster_batched(wfs, policies, placement_stats=stats_i, **kw)
+            if time.time() - t0 < warm:
+                warm, place_stats = time.time() - t0, stats_i
     hits_warm = _CACHE_HITS[0] - hits1
+    retrace_audit = _audit_payload(cc, f"cluster/{name}", enforce=True)
     res_py: dict = {}
     py_wall: dict = {}
     t0 = time.time()
@@ -652,6 +689,7 @@ def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
             "hits_cold": hits_cold,
             "hits_warm": hits_warm,
         },
+        "retrace_audit": retrace_audit,
         "rows": rows,
     }
 
@@ -683,15 +721,17 @@ def _cluster_sweep_variant() -> dict:
     stats: dict = {}
     res: dict = {}
     hits1 = _CACHE_HITS[0]
-    for _ in range(2):
-        st_i: dict = {}
-        t0 = time.time()
-        res = run_cluster_sweep(
-            corpora, policies, node_counts=node_counts, placement_stats=st_i, **kw
-        )
-        if time.time() - t0 < warm:
-            warm, stats = time.time() - t0, st_i
+    with _audit_counter() as cc:
+        for _ in range(2):
+            st_i: dict = {}
+            t0 = time.time()
+            res = run_cluster_sweep(
+                corpora, policies, node_counts=node_counts, placement_stats=st_i, **kw
+            )
+            if time.time() - t0 < warm:
+                warm, stats = time.time() - t0, st_i
     hits_warm = _CACHE_HITS[0] - hits1
+    retrace_audit = _audit_payload(cc, "cluster/sweep", enforce=True)
 
     n = sum(r.tasks_run for r in res.values())
     _row(
@@ -775,6 +815,7 @@ def _cluster_sweep_variant() -> dict:
             "hits_cold": hits_cold,
             "hits_warm": hits_warm,
         },
+        "retrace_audit": retrace_audit,
         "parity": {"corpus": pc, "policy": pp, "n_nodes": pn, "vs": "windows", "exact": bool(exact)},
         "rows": rows,
     }

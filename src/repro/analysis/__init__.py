@@ -1,0 +1,37 @@
+"""repro.analysis — JAX-aware static analysis + trace-time audit.
+
+The engine's correctness rests on disciplines that plain review keeps
+missing (each rule below exists because this repo violated it once):
+bit-parity with the host oracles requires one shared x64 ladder, jitted
+programs must stay free of host syncs and Python control flow on tracers,
+and the padding contracts require every warm bench iteration to hit the
+jit cache instead of recompiling.  This package makes those disciplines
+machine-checked:
+
+* **Layer 1 — AST lint** (``python -m repro.analysis <paths>``, console
+  script ``repro-analysis``): a rule engine over Python ASTs with
+  repo-specific rules RA001-RA006 (``repro.analysis.rules``), inline
+  ``# ra: ignore[RA00X]`` suppressions and a checked-in baseline file for
+  grandfathered findings (``repro.analysis.baseline``).  See ANALYSIS.md
+  for the rule catalogue and the originating bug behind each rule.
+* **Layer 2 — trace-time audit** (``repro.analysis.trace_audit``): a
+  retrace/recompile counter over jax's monitoring events (the bench's
+  warm-iteration "0 recompiles" gate and the ``no_recompiles`` pytest
+  fixture), a ``lax.scan`` carry dtype-stability checker, and a jaxpr
+  walk flagging giant closure-captured constants baked into executables.
+
+The lint layer is stdlib-only (no jax import), so it runs first in CI in
+milliseconds; the audit layer imports jax lazily.
+"""
+
+from repro.analysis.engine import AnalysisResult, analyze_paths, iter_py_files
+from repro.analysis.rules import RULES, Finding, check_source
+
+__all__ = [
+    "AnalysisResult",
+    "Finding",
+    "RULES",
+    "analyze_paths",
+    "check_source",
+    "iter_py_files",
+]

@@ -282,7 +282,7 @@ class BatchedAdmissionController(_AdmissionBase):
 
     def _admit_device(self, request_ids, bnd, val, starts, ends, rels):
         from repro.sim.batch_engine import bucket_size, pad_rows
-        from repro.sim.device_timeline import admission_program
+        from repro.sim.device_timeline import _x64_ctx, admission_program
 
         C = len(request_ids)
         sw = np.nextafter(starts[:, None] + bnd, np.inf)  # switch instants (right-open steps)
@@ -313,9 +313,7 @@ class BatchedAdmissionController(_AdmissionBase):
             pad_rows(live, Cp, False),
             pad_rows(np.ones(C, dtype=bool), Cp, False),
         )
-        from jax.experimental import enable_x64
-
-        with enable_x64():
+        with _x64_ctx():
             admits = np.asarray(admission_program()(*args, self.budget))[:C]
 
         adm = np.flatnonzero(admits)

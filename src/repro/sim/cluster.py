@@ -389,9 +389,8 @@ def _place_rows_batched(
     placement is the oracle's last-resort +1.0 clock walk when the
     completion heap drains with a row still unplaced — unreachable for
     node-capped allocations, counted in ``waits_host``."""
-    from jax.experimental import enable_x64  # deferred: keeps the oracle jax-free
-
-    from repro.sim.device_timeline import first_fit_window, schedule_epoch
+    # deferred import keeps the oracle path (run_cluster) jax-free
+    from repro.sim.device_timeline import _x64_ctx, first_fit_window, schedule_epoch
 
     R = len(run_rows)
     profs = [Timeline() for _ in range(n_nodes)]
@@ -431,7 +430,7 @@ def _place_rows_batched(
         return [float(e) for e in ends]
 
     expired_at = -np.inf
-    with enable_x64():  # one context across all epoch dispatches
+    with _x64_ctx():  # one context across all epoch dispatches
         while r < R:
             if now > expired_at:
                 # the clock only moves when a row waits, so most windows skip

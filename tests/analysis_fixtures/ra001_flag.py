@@ -1,0 +1,17 @@
+"""MUST-FLAG RA001: the seed's segmentation bug, verbatim shape.
+
+`jnp.maximum.accumulate` silently resolves to the *host numpy* ufunc
+method (jax.numpy ufuncs don't implement .accumulate), so it concretizes
+tracers and broke the k-segments forward fill until PR 1 replaced it
+with `lax.cummax`.
+"""
+
+import jax.numpy as jnp
+
+
+def forward_fill_peaks(v):
+    return jnp.maximum.accumulate(v)
+
+
+def pairwise_table(a, b):
+    return jnp.add.outer(a, b)

@@ -1,0 +1,16 @@
+"""MUST-PASS RA001: the sanctioned replacements, plus host-numpy use.
+
+`lax.cummax` is the tracing-safe prefix max; `np.maximum.accumulate` on
+host arrays (benchmark post-processing) is fine — RA001 is jnp-only.
+"""
+
+import numpy as np
+from jax import lax
+
+
+def forward_fill_peaks(v):
+    return lax.cummax(v)
+
+
+def host_fill(v):
+    return np.maximum.accumulate(np.asarray(v))

@@ -1,0 +1,12 @@
+"""MUST-PASS RA002: the platform-guarded donation from train/trainer.py.
+
+Donation is an off-CPU optimization only; the guard consults
+jax.default_backend() in the same scope as the donate kwarg.
+"""
+
+import jax
+
+
+def make_step(train_step):
+    donate = () if jax.default_backend() == "cpu" else (0,)
+    return jax.jit(train_step, donate_argnums=donate)

@@ -1,0 +1,30 @@
+"""MUST-FLAG RA003: host syncs inside traced bodies.
+
+Covers all three detector branches: .item(), np.asarray(tracer), and
+builtin float()/int() on a traced value — in a decorated jit function,
+a scan body passed by name, and a lambda passed to fori_loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def jit_body(x):
+    peak = x.max().item()
+    host = np.asarray(x)
+    return x * peak + host.sum()
+
+
+def scan_step(carry, x):
+    return carry + float(x), None
+
+
+def run(xs):
+    return lax.scan(scan_step, 0.0, xs)
+
+
+def loop(xs):
+    return lax.fori_loop(0, 8, lambda i, c: c + int(xs[i]), 0)

@@ -1,0 +1,20 @@
+"""MUST-PASS RA003: the same operations where they are legitimate.
+
+Host syncs in plain host wrappers (the repo's `first_fit_window` /
+`sweep_schedule` pattern: dispatch the program, then np.asarray the
+result) are fine — RA003 only applies inside traced scopes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def device_program(x):
+    return jnp.cumsum(x) * x.max()
+
+
+def host_wrapper(x):
+    out = np.asarray(device_program(jnp.asarray(x)))
+    return float(out[-1]), out.tolist()

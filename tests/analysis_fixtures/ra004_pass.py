@@ -1,0 +1,21 @@
+"""MUST-PASS RA004: the sanctioned ladder-selection spellings.
+
+The batch_engine pattern: dtype derived from the x64 flag via the
+conditional expression, and float32 as a *signature default* (callers
+override it through the ladder) — both exempt.
+"""
+
+import jax.numpy as jnp
+
+from repro.sim.device_timeline import _x64_ctx
+
+
+def ladder(y, *, x64=False):
+    dt = jnp.float64 if x64 else jnp.float32
+    acc = jnp.zeros((), dt)
+    with _x64_ctx():
+        return acc + y.sum().astype(dt)
+
+
+def engine(y, dtype=jnp.float32):
+    return y.astype(dtype).sum()

@@ -1,0 +1,14 @@
+"""MUST-FLAG RA005: raw enable_x64 outside device_timeline.py.
+
+This was the live finding in serve/admission.py and sim/cluster.py that
+this rule was written from: each module re-imported enable_x64 and
+re-entered the config context even when x64 was already the global
+default, forking the trace-context story across the jit caches.
+"""
+
+from jax.experimental import enable_x64
+
+
+def dispatch(program, *args):
+    with enable_x64():
+        return program(*args)

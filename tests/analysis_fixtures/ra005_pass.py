@@ -1,0 +1,13 @@
+"""MUST-PASS RA005: the shared ladder context from device_timeline.
+
+`_x64_ctx()` no-ops when jax_enable_x64 is already on, so warm dispatch
+keeps one trace context (and therefore one jit-cache entry) regardless
+of the global flag.
+"""
+
+from repro.sim.device_timeline import _x64_ctx
+
+
+def dispatch(program, *args):
+    with _x64_ctx():
+        return program(*args)

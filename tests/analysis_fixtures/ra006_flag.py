@@ -1,0 +1,23 @@
+"""MUST-FLAG RA006: Python control flow on tracer-valued tests.
+
+An `if` on a jnp predicate inside a jit body raises
+ConcretizationTypeError (or, pre-jit, silently specializes the program
+on one branch); a `while` on a device comparison is the same bug.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_over_budget(x, budget):
+    if jnp.any(x > budget):
+        return jnp.minimum(x, budget)
+    return x
+
+
+@jax.jit
+def drain(x):
+    while jnp.sum(x) > 0:
+        x = x - 1
+    return x

@@ -1,0 +1,25 @@
+"""MUST-PASS RA006: structured control flow, and static Python branches.
+
+`jnp.where`/`lax.cond` express the branch in-program; an `if` on a
+*static* Python value (config, shape) inside a jit body is legitimate
+trace-time specialization and must not flag.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def clip_over_budget(x, budget):
+    return jnp.where(x > budget, jnp.minimum(x, budget), x)
+
+
+def make_program(chunks: int):
+    @jax.jit
+    def run(x):
+        if chunks > 1:
+            x = x.reshape(chunks, -1).sum(axis=0)
+        return lax.cond(x.size > 0, lambda v: v.sum(), lambda v: jnp.zeros(()), x)
+
+    return run

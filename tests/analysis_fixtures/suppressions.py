@@ -1,0 +1,15 @@
+"""Suppression-syntax fixture: inline ignores and their edge cases."""
+
+import jax.numpy as jnp
+
+
+def fill_suppressed(v):
+    return jnp.maximum.accumulate(v)  # ra: ignore[RA001]
+
+
+def fill_blanket(v):
+    return jnp.maximum.accumulate(v)  # ra: ignore
+
+
+def fill_wrong_rule(v):
+    return jnp.maximum.accumulate(v)  # ra: ignore[RA003]

@@ -44,3 +44,22 @@ except ImportError:
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def no_recompiles():
+    """The trace-audit retrace guard as a fixture: any jitted call inside
+    the context must hit the in-process jit cache (the fine_bucket /
+    pad_rows padding contract).
+
+        def test_warm(no_recompiles):
+            program(*cold_args)          # compile here
+            with no_recompiles("warm"):
+                program(*warm_args)      # must not retrace
+    """
+    from repro.analysis.trace_audit import no_recompiles as guard
+
+    return guard
