@@ -47,10 +47,15 @@ prints ``fig7a/python_engine``, ``fig7a/batch_engine_cold`` (first call,
 includes jit compile) and ``fig7a/batch_engine`` (steady state, with the
 speedup) so the comparison lives in one run.  ``cluster`` does the same for
 the event-driven scheduler: ``run_cluster`` (sequential predictors) vs
-``run_cluster_batched`` (all policies from one shared device-ladder pass).  Both engines use the
-k-Segments "progressive" error mode here so their grids are comparable cell
-by cell (the parity tests in tests/test_batch_engine.py assert per-execution
-agreement); simulation *tests* keep exercising the insample default.
+``run_cluster_batched`` (all policies from one shared device-ladder pass).  The fig7/fig8 grids
+run the k-Segments family in the paper's "insample" error mode with an
+explicit bounded history window (``insample_window=64`` — the device engine's
+ring-buffer formulation; tests/test_predictor_zoo.py asserts per-execution
+agreement with the sequential model run with the same window), so the
+benched figures exercise the insample path on device.  fig7a additionally
+*gates* on python-vs-batch parity: each (method, fraction) cell's mean
+wastage must agree within 5% or the run fails (the CI smoke canary).  The
+cluster benches keep the "progressive" mode.
 ``REPRO_PALLAS_INTERPRET=0`` additionally switches the ``kernels`` bench to
 the compiled Pallas path on TPU hosts (see repro.kernels.ops).
 
@@ -92,7 +97,16 @@ SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
 ENGINE = os.environ.get("REPRO_BENCH_ENGINE", "batch")
 if ENGINE not in ("batch", "python"):
     raise SystemExit(f"REPRO_BENCH_ENGINE must be 'batch' or 'python', got {ENGINE!r}")
-METHODS = ("default", "witt-lr", "ppm", "ppm-improved", "ksegments-selective", "ksegments-partial")
+METHODS = (
+    "default",
+    "witt-lr",
+    "ppm",
+    "ppm-improved",
+    "ksegments-selective",
+    "ksegments-partial",
+    "sizey",
+    "ksplus",
+)
 FRACS = (0.25, 0.5, 0.75)
 
 _JSON_ROWS: list[dict] = []
@@ -195,9 +209,12 @@ def _grid_cfg():
     from repro.core.ksegments import KSegmentsConfig
     from repro.sim.simulator import SimConfig
 
+    # The paper's insample error mode, in the bounded-history formulation the
+    # device engine carries (64 executions is far past every generated task's
+    # steady state, and the sequential engine runs the identical window).
     return SimConfig(
         min_executions=max(int(20 * SCALE), 8),
-        ksegments=KSegmentsConfig(error_mode="progressive"),
+        ksegments=KSegmentsConfig(error_mode="insample", insample_window=64),
     )
 
 
@@ -257,6 +274,19 @@ def bench_fig7a() -> None:
         engine="batch",
     )
 
+    # Parity gate: the same grid on both engines must agree per cell.  This
+    # is the five-method CI canary — every ENGINE_METHODS family (default,
+    # Witt, PPM, k-Segments, Sizey, KS+) crossed with the insample device
+    # path; a >5% drift in any (method, fraction) mean wastage fails the run.
+    w_py = fig7a_mean_wastage(res_py)
+    w_b = fig7a_mean_wastage(_res_b)
+    for frac in FRACS:
+        for m in METHODS:
+            wp, wb = w_py[(m, frac)], w_b[(m, frac)]
+            if not np.isclose(wp, wb, rtol=0.05, atol=1e-2):
+                _fail(f"fig7a/{m}@{frac}: engine parity broke (python {wp:.3f} vs batch {wb:.3f} GiB*s)")
+    _row("fig7a/engine_parity", warm * 1e6 / max(n, 1), f"cells={len(FRACS) * len(METHODS)} rtol=0.05", engine="both")
+
     res, t = _grid_results()
     w = fig7a_mean_wastage(res)
     for frac in FRACS:
@@ -308,7 +338,7 @@ def bench_fig8() -> None:
 
         for trace in (saw, smooth):
             for k in ks:
-                cfg = SimConfig(ksegments=KSegmentsConfig(k=k, error_mode="progressive"))
+                cfg = SimConfig(ksegments=KSegmentsConfig(k=k, error_mode="insample", insample_window=64))
                 t0 = time.time()
                 r = simulate_task(trace, "ksegments-selective", 0.5, cfg)
                 dt = time.time() - t0

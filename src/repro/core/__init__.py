@@ -22,6 +22,7 @@ from repro.core.predictor import (
     make_method,
 )
 from repro.core.segmentation import segment_bounds, segment_peaks, segment_peaks_np
+from repro.core.sizey import SizeyPortfolio
 
 __all__ = [
     "AttemptOutcome",
@@ -45,4 +46,5 @@ __all__ = [
     "segment_bounds",
     "segment_peaks",
     "segment_peaks_np",
+    "SizeyPortfolio",
 ]

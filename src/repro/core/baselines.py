@@ -196,4 +196,8 @@ def make_baseline(name: str, default_mib: float, node_cap_mib: float):
         return TovarPPM(default_mib, node_cap_mib, improved=False)
     if name == "ppm-improved":
         return TovarPPM(default_mib, node_cap_mib, improved=True)
+    if name == "sizey":
+        from repro.core.sizey import SizeyPortfolio  # deferred: sizey builds on this module
+
+        return SizeyPortfolio(default_mib)
     raise ValueError(f"unknown baseline: {name!r}")

@@ -53,6 +53,22 @@ class KSegmentsConfig:
     # in exchange for amortized O(1) bookkeeping instead of an O(n) rescan
     # per observation.
     insample_refresh_tol: float = 1e-3
+    # Bounded-history insample: only the last ``insample_window`` executions
+    # are rescanned exactly per observation; a point leaving the window
+    # freezes its residual under the eviction-time fit into a running maximum
+    # that never decays (conservative, never unsafe).  This is precisely the
+    # formulation the lax.scan batch engine carries (a fixed-size ring buffer
+    # rides the scan carry), so the sequential model with the same window is
+    # its bit-parity oracle.  ``None`` keeps the unbounded drift-tolerance
+    # scheme above (host-only).
+    insample_window: int | None = None
+    # Residual units for the error offsets: "absolute" (MiB / seconds — the
+    # source paper) or "relative" — residuals are normalized by the
+    # prediction, and offsets scale with it at prediction time.  The relative
+    # mode is the KS+ offset handling (arxiv 2408.12290: percentage-style
+    # offsets on the segment-wise over-time allocation), exposed as the
+    # ``"ksplus"`` method.
+    offset_mode: str = "absolute"
 
 
 class KSegmentsModel:
@@ -60,6 +76,12 @@ class KSegmentsModel:
 
     def __init__(self, config: KSegmentsConfig | None = None):
         self.config = config or KSegmentsConfig()
+        if self.config.error_mode not in ("insample", "progressive"):
+            raise ValueError(f"unknown error_mode {self.config.error_mode!r}")
+        if self.config.offset_mode not in ("absolute", "relative"):
+            raise ValueError(f"unknown offset_mode {self.config.offset_mode!r}")
+        if self.config.insample_window is not None and self.config.insample_window < 1:
+            raise ValueError("insample_window must be >= 1 (or None for unbounded)")
         k = self.config.k
         self._rt_stats = np.zeros(regression.NUM_STATS, dtype=np.float64)
         self._rt_over_err = 0.0  # max(pred_runtime - actual_runtime, 0) over history
@@ -81,6 +103,10 @@ class KSegmentsModel:
         self._rt_drift = 0.0
         self._seg_drift = 0.0
         self._umax = 0.0
+        # Bounded-window mode: residual extremes of points evicted from the
+        # window, frozen under their eviction-time fit (monotone maxima).
+        self._ev_rt = -np.inf
+        self._ev_seg = np.full(k, -np.inf, dtype=np.float64)
 
     # -- state ------------------------------------------------------------
 
@@ -120,9 +146,17 @@ class KSegmentsModel:
 
         if cfg.error_mode == "progressive" and self._n_obs > 0:
             rt_pred = float(regression.predict_np(self._rt_stats, u))
-            self._rt_over_err = max(self._rt_over_err, rt_pred - runtime)
             seg_pred = regression.predict_np(self._seg_stats, u)
-            self._seg_under_err = np.maximum(self._seg_under_err, peaks - seg_pred)
+            if cfg.offset_mode == "relative":
+                self._rt_over_err = max(
+                    self._rt_over_err, (rt_pred - runtime) / max(rt_pred, cfg.interval_s)
+                )
+                self._seg_under_err = np.maximum(
+                    self._seg_under_err, (peaks - seg_pred) / np.maximum(seg_pred, cfg.floor_mib)
+                )
+            else:
+                self._rt_over_err = max(self._rt_over_err, rt_pred - runtime)
+                self._seg_under_err = np.maximum(self._seg_under_err, peaks - seg_pred)
 
         self._rt_stats = regression.update_stats_np(self._rt_stats, u, runtime)
         self._seg_stats = regression.update_stats_np(self._seg_stats, u, peaks)
@@ -131,19 +165,51 @@ class KSegmentsModel:
         if cfg.error_mode == "insample":
             self._observe_insample(u, runtime, peaks)
 
+    def _residuals(self, rt_fit, seg_fit, hu, hrt, hpk) -> tuple[np.ndarray, np.ndarray]:
+        """Residuals of a fit over history rows, in the configured offset
+        units: runtime overprediction (rows,) and per-segment peak
+        underprediction (rows, k) — absolute (seconds / MiB), or normalized by
+        the (floored) prediction in the KS+ relative mode."""
+        rt_pred = rt_fit[0] + rt_fit[1] * hu
+        seg_pred = seg_fit[0][None, :] + seg_fit[1][None, :] * hu[:, None]
+        rt_res = rt_pred - hrt
+        seg_res = hpk - seg_pred
+        if self.config.offset_mode == "relative":
+            rt_res = rt_res / np.maximum(rt_pred, self.config.interval_s)
+            seg_res = seg_res / np.maximum(seg_pred, self.config.floor_mib)
+        return rt_res, seg_res
+
     def _observe_insample(self, u: float, runtime: float, peaks: np.ndarray) -> None:
         """Maintain the extreme residuals of the *current* fit over history.
 
         Recomputing them from scratch per observation is O(n) — O(n^2) per
-        task.  Instead the stored extremes are extended with the new point's
-        residual under the current fit, and a drift bound tracks how much any
-        *historical* residual can have moved since the extremes were last
-        computed exactly: a fit change (d_intercept, d_slope) moves every
-        residual by at most |d_intercept| + |d_slope| * max|u|.  Only when
-        that bound could change an offset materially (relative
-        ``insample_refresh_tol``) is the full history rescanned — fits
-        converge as observations accumulate, so refreshes thin out and the
-        amortized maintenance cost is O(1) per observation.
+        task.  Two bounded-cost schemes are implemented:
+
+        * ``insample_window=W``: only the last W executions are rescanned
+          exactly; a point leaving the window freezes its residual under the
+          eviction-time fit into a monotone running maximum.  Offsets are
+          exact over the window and conservative (never decaying) for evicted
+          history — the same recurrence the lax.scan batch engine carries, so
+          the two are bit-parity twins.
+        * unbounded (``insample_window=None``, absolute offsets): the stored
+          extremes are extended with the new point's residual under the
+          *reference* fit — the fit of the last exact rescan — so every stored
+          extreme is a residual under ONE fit, and a drift bound covers them
+          all uniformly: a fit change (d_intercept, d_slope) moves any
+          residual by at most |d_intercept| + |d_slope| * max|u|.  (Folding
+          under the *current* fit instead — a previous version's behaviour —
+          let a point inserted mid-drift escape the bound by up to its
+          insertion-time drift; tests/test_ksegments.py pins the guarantee
+          against a brute-force exact rescan.)  Only when the bound could
+          move an offset materially (relative ``insample_refresh_tol``) is
+          the full history rescanned — fits converge as observations
+          accumulate, so refreshes thin out and amortized maintenance is
+          O(1) per observation.
+
+        Relative (KS+) offsets are not Lipschitz in the fit the way absolute
+        residuals are (the normalizer moves with the prediction), so the
+        unbounded relative mode rescans exactly every observation instead of
+        using the drift bound — the windowed mode is the fast path there.
         """
         n = self._n_obs  # already includes this observation
         if n > len(self._hist_u):  # amortized doubling growth
@@ -161,17 +227,42 @@ class KSegmentsModel:
 
         rt_fit = regression.fit_np(self._rt_stats)  # (intercept, slope) scalars
         seg_fit = regression.fit_np(self._seg_stats)  # ((k,), (k,))
-        if self._ref_fits is None:
+
+        W = self.config.insample_window
+        if W is not None:
+            if n > W:
+                # The oldest windowed point (n-1-W) leaves the window now:
+                # freeze its residual under the eviction-time (current) fit.
+                j = n - 1 - W
+                rt_r, seg_r = self._residuals(
+                    rt_fit, seg_fit, self._hist_u[j : j + 1], self._hist_rt[j : j + 1], self._hist_peaks[j : j + 1]
+                )
+                self._ev_rt = max(self._ev_rt, float(rt_r[0]))
+                self._ev_seg = np.maximum(self._ev_seg, seg_r[0])
+            lo = max(n - W, 0)
+            rt_r, seg_r = self._residuals(
+                rt_fit, seg_fit, self._hist_u[lo:n], self._hist_rt[lo:n], self._hist_peaks[lo:n]
+            )
+            self._rt_over_err = max(float(rt_r.max()), self._ev_rt)
+            self._seg_under_err = np.maximum(np.max(seg_r, axis=0), self._ev_seg)
+            self._rt_drift = self._seg_drift = 0.0
+            return
+
+        if self._ref_fits is None or self.config.offset_mode == "relative":
             self._refresh_insample(rt_fit, seg_fit)
             return
         ref_rt, ref_seg = self._ref_fits
         self._rt_drift = abs(rt_fit[0] - ref_rt[0]) + abs(rt_fit[1] - ref_rt[1]) * self._umax
         self._seg_drift = float(np.max(np.abs(seg_fit[0] - ref_seg[0]) + np.abs(seg_fit[1] - ref_seg[1]) * self._umax))
 
-        # The new point's residual is exact under the current fit; stored
-        # historical extremes are stale by at most the drift bound.
-        self._rt_over_err = max(self._rt_over_err, float(rt_fit[0] + rt_fit[1] * u) - runtime)
-        self._seg_under_err = np.maximum(self._seg_under_err, peaks - (seg_fit[0] + seg_fit[1] * u))
+        # Fold the new point under the REFERENCE fit: every stored extreme is
+        # then a residual under the same fit, and "exact <= stored + drift"
+        # holds for all of history uniformly (|u| <= umax covers this point).
+        rt_r, seg_r = self._residuals(
+            ref_rt, ref_seg, self._hist_u[n - 1 : n], self._hist_rt[n - 1 : n], self._hist_peaks[n - 1 : n]
+        )
+        self._rt_over_err = max(self._rt_over_err, float(rt_r[0]))
+        self._seg_under_err = np.maximum(self._seg_under_err, seg_r[0])
 
         tol = self.config.insample_refresh_tol
         if self._rt_drift > tol * (abs(self._rt_over_err) + 1.0) or self._seg_drift > tol * (
@@ -182,11 +273,11 @@ class KSegmentsModel:
     def _refresh_insample(self, rt_fit, seg_fit) -> None:
         """Exact O(n) rescan of the residual extremes under the current fit."""
         n = self._n_obs
-        hu = self._hist_u[:n]
-        rt_res = (rt_fit[0] + rt_fit[1] * hu) - self._hist_rt[:n]
+        rt_res, seg_res = self._residuals(
+            rt_fit, seg_fit, self._hist_u[:n], self._hist_rt[:n], self._hist_peaks[:n]
+        )
         self._rt_over_err = float(rt_res.max())  # largest runtime overprediction
-        seg_pred = seg_fit[0][None, :] + seg_fit[1][None, :] * hu[:, None]
-        self._seg_under_err = np.max(self._hist_peaks[:n] - seg_pred, axis=0)
+        self._seg_under_err = np.max(seg_res, axis=0)
         self._ref_fits = (rt_fit, seg_fit)
         self._rt_drift = self._seg_drift = 0.0
 
@@ -194,9 +285,13 @@ class KSegmentsModel:
 
     def predict_runtime(self, input_size: float) -> float:
         """Offset (under-)predicted runtime, floored at one interval."""
+        cfg = self.config
         raw = float(regression.predict_np(self._rt_stats, float(input_size) - self._x0))
         # + drift: a possibly-stale insample extreme stays conservative.
-        return max(raw - max(self._rt_over_err + self._rt_drift, 0.0), self.config.interval_s)
+        off = max(self._rt_over_err + self._rt_drift, 0.0)
+        if cfg.offset_mode == "relative":  # KS+: offsets scale with the prediction
+            off = off * max(raw, cfg.interval_s)
+        return max(raw - off, cfg.interval_s)
 
     def predict(self, input_size: float) -> StepAllocation:
         """Paper Sec. III-C: the monotone k-step allocation for a new run."""
@@ -212,7 +307,10 @@ class KSegmentsModel:
         v = np.asarray(
             regression.predict_np(self._seg_stats, float(input_size) - self._x0), dtype=np.float64
         )
-        v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)
+        if cfg.offset_mode == "relative":
+            v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0) * np.maximum(v, cfg.floor_mib)
+        else:
+            v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)
         if v[0] < 0:  # paper: negative first prediction -> 100 MB default
             v[0] = cfg.floor_mib
         v = np.maximum.accumulate(v)  # monotone: v_s := max(v_s, v_{s-1})
@@ -230,12 +328,19 @@ class KSegmentsModel:
         k = cfg.k
         u = np.asarray(input_sizes, dtype=np.float64) - self._x0  # (C,)
         raw = regression.predict_np(self._rt_stats, u)
-        r_e = np.maximum(raw - max(self._rt_over_err + self._rt_drift, 0.0), cfg.interval_s)
+        rt_off = max(self._rt_over_err + self._rt_drift, 0.0)
+        if cfg.offset_mode == "relative":
+            r_e = np.maximum(raw - rt_off * np.maximum(raw, cfg.interval_s), cfg.interval_s)
+        else:
+            r_e = np.maximum(raw - rt_off, cfg.interval_s)
         bounds = np.arange(1, k + 1, dtype=np.float64)[None, :] * (r_e[:, None] / k)
         bounds[:, -1] = r_e
 
         v = regression.predict_np(self._seg_stats, u[:, None])  # (C, k)
-        v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)[None, :]
+        if cfg.offset_mode == "relative":
+            v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)[None, :] * np.maximum(v, cfg.floor_mib)
+        else:
+            v = v + np.maximum(self._seg_under_err + self._seg_drift, 0.0)[None, :]
         neg = v[:, 0] < 0
         v[neg, 0] = cfg.floor_mib
         v = np.maximum.accumulate(v, axis=1)

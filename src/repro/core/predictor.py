@@ -25,6 +25,8 @@ METHODS = (
     "ppm-improved",
     "ksegments-selective",
     "ksegments-partial",
+    "sizey",  # Bader et al. 2024: {linear, quantile} portfolio by allocation quality
+    "ksplus",  # KS+ (arxiv 2408.12290): k-Segments with relative (percentage) offsets
 )
 
 # Retry policy per method, shared by the sequential adapters below and the
@@ -123,6 +125,12 @@ def make_method(
         cfg = ksegments_config or KSegmentsConfig()
         strategy = name.split("-", 1)[1] if "-" in name else cfg.strategy
         cfg = dataclasses.replace(cfg, strategy=strategy)
+        return KSegmentsMethod(default_mib, cfg)
+    if name == "ksplus":
+        import dataclasses
+
+        cfg = ksegments_config or KSegmentsConfig()
+        cfg = dataclasses.replace(cfg, offset_mode="relative", strategy="selective")
         return KSegmentsMethod(default_mib, cfg)
     return _StaticAdapter(make_baseline(name, default_mib, node_cap_mib))
 

@@ -100,12 +100,17 @@ def generate_arrivals(cfg: StreamConfig) -> tuple[list[Arrival], list[Arrival]]:
     Poisson: exponential inter-arrival gaps at ``rate_per_s``.  Bursty: an
     on/off modulated Poisson process — ``burst_factor`` x the base rate for
     the first half of every ``burst_period_s`` cycle, the base rate for the
-    second — which stresses admission exactly when the budget is tightest."""
-    rng = np.random.default_rng(cfg.seed)
+    second — which stresses admission exactly when the budget is tightest.
+
+    Warmup and serving draw from independent seeded child generators, so the
+    serving stream is a function of the seed alone: changing ``n_warmup``
+    resizes the warmup set without perturbing a single serving arrival."""
+    rng_warm = np.random.default_rng([cfg.seed, 0])
+    rng = np.random.default_rng([cfg.seed, 1])
     warm = []
     for i in range(cfg.n_warmup):
-        plen = int(rng.integers(cfg.prompt_len_lo, cfg.prompt_len_hi))
-        warm.append(Arrival(0.0, f"warm{i}", plen, _series(cfg, plen, rng)))
+        plen = int(rng_warm.integers(cfg.prompt_len_lo, cfg.prompt_len_hi))
+        warm.append(Arrival(0.0, f"warm{i}", plen, _series(cfg, plen, rng_warm)))
     arrivals = []
     t = 0.0
     for i in range(cfg.n_requests):
@@ -138,7 +143,7 @@ def _actual_usage(live: dict, t: float, interval_s: float) -> float:
 
 
 def run_stream(
-    cfg: StreamConfig, engine: str = "batched", controller=None, arrivals=None
+    cfg: StreamConfig, engine: str = "batched", controller=None, arrivals=None, debug_state=None
 ) -> StreamResult:
     """Replay one workload through one admission engine.
 
@@ -151,7 +156,11 @@ def run_stream(
 
     ``arrivals`` overrides the generated workload with a pre-built
     ``(warmup, serving arrivals)`` pair — e.g. to replay distorted series
-    (the eviction-parity tests) or recorded traces."""
+    (the eviction-parity tests) or recorded traces.
+
+    ``debug_state``, when a dict, receives the final bookkeeping maps
+    (``live``, ``info``, ``plans``, ``evicted_ids``) after the loop drains —
+    all empty on a clean run; the leak-regression tests assert exactly that."""
     warm, arrivals = arrivals if arrivals is not None else generate_arrivals(cfg)
     ctl = controller if controller is not None else make_controller(cfg, engine)
     for a in warm:
@@ -177,7 +186,11 @@ def run_stream(
             rid = max(live, key=lambda r: (live[r][0], r))
             live.pop(rid)
             plans.pop(rid, None)
+            info.pop(rid, None)  # the eviction ends this request's lifecycle
             ctl.release(rid)
+            # tombstone for the finish event still sitting in the heap; the
+            # stale-event pop below removes it again, so a drained loop ends
+            # with every bookkeeping map empty
             evicted_ids.add(rid)
             evicted += 1
 
@@ -189,6 +202,13 @@ def run_stream(
         if next_fin <= next_arr:
             t, rid = heapq.heappop(finishes)
             if rid in evicted_ids:
+                # the request was killed before its finish fired: consume the
+                # stale event and its tombstone, and still advance the clock —
+                # survivors matured since the last check, so the backstop must
+                # recheck here too, not only at real finishes
+                evicted_ids.discard(rid)
+                makespan = max(makespan, t)
+                evict_until_fits(t)
                 continue
             start, series = live.pop(rid)
             a = info.pop(rid)
@@ -240,6 +260,8 @@ def run_stream(
         evict_until_fits(batch[-1].t)
         i = j
 
+    if debug_state is not None:
+        debug_state.update(live=live, info=info, plans=plans, evicted_ids=evicted_ids)
     wastage = ctl.reservation_wastage(finished_plans)
     n_dec = max(len(decisions), 1)
     lat = np.asarray(latencies) if latencies else np.zeros(1)

@@ -21,11 +21,16 @@ failure index, wastage) for all policies in one pass, so
 (per-task parity with the sequential scheduler in tests/test_cluster_batch.py).
 
 The sequential simulator stays the cross-check oracle: with
-``error_mode="progressive"`` both engines agree per execution (see
-tests/test_batch_engine.py).  Differences to the oracle elsewhere:
+``error_mode="progressive"`` — or ``error_mode="insample"`` and an explicit
+``insample_window`` — both engines agree per execution (see
+tests/test_batch_engine.py, tests/test_predictor_zoo.py).  Differences to
+the oracle elsewhere:
 
-* k-Segments offsets are progressive, not the ``SimConfig`` default insample
-  (a bounded scan carry cannot refit over unbounded history).
+* Insample offsets need an explicit history bound: the engine carries a
+  fixed-size observation ring (see jax_sim module docstring), so the
+  *unbounded* ``KSegmentsConfig(insample_window=None)`` default is rejected
+  here — pick a window (the sequential oracle with the same window is the
+  parity twin).
 * PPM considers every observed peak as a candidate instead of capping at
   ``TovarPPM.MAX_CANDIDATES`` quantiles (matters only past 256 distinct
   peaks).
@@ -82,7 +87,16 @@ def _map_concurrent(fn, items: list):
 
 
 @functools.lru_cache(maxsize=None)
-def _lane_batched(methods: tuple[str, ...], k: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float):
+def _lane_batched(
+    methods: tuple[str, ...],
+    k: int,
+    interval_s: float,
+    factor: float,
+    floor_mib: float,
+    cap_mib: float,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
+):
     """Compiled (lanes-vmapped) engine for one static configuration."""
     f = functools.partial(
         simulate_task_methods,
@@ -92,12 +106,23 @@ def _lane_batched(methods: tuple[str, ...], k: int, interval_s: float, factor: f
         factor=factor,
         floor_mib=floor_mib,
         cap_mib=cap_mib,
+        error_mode=error_mode,
+        insample_window=insample_window,
     )
     return jax.jit(jax.vmap(f, in_axes=(0, 0, 0, 0, None)))
 
 
 @functools.lru_cache(maxsize=None)
-def _ksweep_batched(method: str, k_max: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float):
+def _ksweep_batched(
+    method: str,
+    k_max: int,
+    interval_s: float,
+    factor: float,
+    floor_mib: float,
+    cap_mib: float,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
+):
     """Compiled engine vmapped over the traced segment count (fig8)."""
     f = functools.partial(
         simulate_task_methods,
@@ -107,12 +132,25 @@ def _ksweep_batched(method: str, k_max: int, interval_s: float, factor: float, f
         factor=factor,
         floor_mib=floor_mib,
         cap_mib=cap_mib,
+        error_mode=error_mode,
+        insample_window=insample_window,
     )
     return jax.jit(jax.vmap(f, in_axes=(None, None, None, None, 0)))
 
 
 @functools.lru_cache(maxsize=None)
-def _ladder_batched(methods: tuple[str, ...], k: int, interval_s: float, factor: float, floor_mib: float, cap_mib: float, max_attempts: int, x64: bool):
+def _ladder_batched(
+    methods: tuple[str, ...],
+    k: int,
+    interval_s: float,
+    factor: float,
+    floor_mib: float,
+    cap_mib: float,
+    max_attempts: int,
+    x64: bool,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
+):
     """Compiled (lanes-vmapped) retry-ladder recorder for one static config."""
     f = functools.partial(
         simulate_task_ladders,
@@ -124,6 +162,8 @@ def _ladder_batched(methods: tuple[str, ...], k: int, interval_s: float, factor:
         cap_mib=cap_mib,
         max_attempts=max_attempts,
         x64=x64,
+        error_mode=error_mode,
+        insample_window=insample_window,
     )
     return jax.jit(jax.vmap(f, in_axes=(0, 0, 0, 0, None)))
 
@@ -133,6 +173,28 @@ def _check_methods(methods) -> tuple[str, ...]:
     if unknown:
         raise ValueError(f"batch engine does not implement {unknown!r}; available: {ENGINE_METHODS}")
     return tuple(methods)
+
+
+def _engine_error_mode(kcfg: KSegmentsConfig) -> tuple[str, int]:
+    """Map a ``KSegmentsConfig`` onto the device engine's static error-mode
+    pair ``(error_mode, insample_window)``.
+
+    Progressive normalizes the window to 0 (one canonical jit cache key).
+    Insample requires the bound to be explicit: the device engine carries a
+    fixed-size observation ring, so the sequential default
+    ``insample_window=None`` (unbounded refit history) has no device twin —
+    callers pick a window and cross-check against the sequential oracle run
+    with the same ``insample_window``.
+    """
+    if kcfg.error_mode == "progressive":
+        return "progressive", 0
+    if kcfg.insample_window is None:
+        raise ValueError(
+            "the batch engine's insample mode needs an explicit history bound: "
+            "set KSegmentsConfig(insample_window=W) (the sequential oracle with "
+            "the same window is the parity twin), or use error_mode='progressive'"
+        )
+    return "insample", int(kcfg.insample_window)
 
 
 def simulate_grid(
@@ -147,7 +209,10 @@ def simulate_grid(
     cfg = cfg or SimConfig()
     methods = _check_methods(methods)
     kcfg = cfg.ksegments
-    fn = _lane_batched(methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib)
+    emode, ewin = _engine_error_mode(kcfg)
+    fn = _lane_batched(
+        methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib, emode, ewin
+    )
 
     per_task: dict[int, tuple[np.ndarray, np.ndarray]] = {}
     tasks = [t for wf in workflows for t in wf.eligible_tasks(cfg.min_executions)]
@@ -246,9 +311,10 @@ def compute_cluster_ladders(
     (``pack_traces``).  Returns ``{(workflow, task name): TaskLadders}``; any
     training fraction is a post-hoc row slice, as in ``simulate_grid``.
 
-    k-Segments offsets are progressive (the engine's bounded-carry mode);
-    cross-checks must run the sequential oracle with
-    ``KSegmentsConfig(error_mode="progressive")``.
+    k-Segments error offsets follow ``kcfg.error_mode`` — progressive, or
+    bounded-history insample with an explicit ``kcfg.insample_window`` (see
+    ``_engine_error_mode``); cross-checks must run the sequential oracle with
+    the same mode and window.
 
     ``x64=True`` runs the ladder scan in float64 (~1.5x ladder cost): on rare
     corpora a float32 prediction lands within an ulp of a capacity comparison
@@ -266,8 +332,9 @@ def compute_cluster_ladders(
                 f"trace {t.name!r} interval {t.interval_s} != config interval {kcfg.interval_s}; "
                 "the ladder program bakes one static monitoring interval"
             )
+    emode, ewin = _engine_error_mode(kcfg)
     fn = _ladder_batched(
-        methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, node_cap_mib, max_attempts, x64
+        methods, kcfg.k, kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, node_cap_mib, max_attempts, x64, emode, ewin
     )
     out: dict[tuple[str, str], TaskLadders] = {}
     dt = jnp.float64 if x64 else jnp.float32
@@ -316,7 +383,8 @@ def simulate_ksweep(
     the traced segment count (static shapes sized by max(ks))."""
     cfg = cfg or SimConfig()
     kcfg = cfg.ksegments
-    fn = _ksweep_batched(method, max(ks), kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib)
+    emode, ewin = _engine_error_mode(kcfg)
+    fn = _ksweep_batched(method, max(ks), kcfg.interval_s, kcfg.retry_factor, kcfg.floor_mib, cfg.node_cap_mib, emode, ewin)
     x, y, lengths = trace.padded()
     waste, retries = fn(
         jnp.asarray(x),

@@ -594,8 +594,11 @@ def run_cluster_batched(
     program; ``waits_host`` = last-resort host clock walks, 0 in practice).
 
     k-Segments policies run with progressive error offsets (the device
-    engine's bounded-carry mode); ``ksegments_config.error_mode`` other than
-    "progressive" is rejected to keep results honest.  ``ladder_x64`` runs
+    engine's bounded-carry mode) by default; ``error_mode="insample"`` is
+    accepted when ``insample_window`` is an explicit bound (the ladder
+    engine's ring-buffer mode — the sequential oracle with the same window
+    is the parity twin), and rejected unbounded to keep results honest.
+    ``ladder_x64`` runs
     the ladder scan in float64, closing the rare f32 ulp-boundary parity gap
     against the float64 numpy predictors at ~1.5x ladder cost.
 
@@ -619,8 +622,11 @@ def run_cluster_batched(
     if placement not in ("auto", "sweep", "windows"):
         raise ValueError(f"unknown placement engine: {placement!r}")
     kcfg = ksegments_config or KSegmentsConfig(error_mode="progressive")
-    if kcfg.error_mode != "progressive":
-        raise ValueError("run_cluster_batched supports only progressive error offsets")
+    if kcfg.error_mode == "insample" and kcfg.insample_window is None:
+        raise ValueError(
+            "run_cluster_batched supports progressive or bounded-history insample "
+            "offsets; set KSegmentsConfig(insample_window=W) for insample"
+        )
     policies = tuple(policies)
     queue, traces = _eligible_queue(workflows, train_frac, max_tasks_per_type, min_executions)
     # The ladder scan is forward-only (an execution's prediction sees only
@@ -711,8 +717,11 @@ def run_cluster_sweep(
     if not isinstance(corpora, dict):
         corpora = {"": corpora}
     kcfg = ksegments_config or KSegmentsConfig(error_mode="progressive")
-    if kcfg.error_mode != "progressive":
-        raise ValueError("run_cluster_sweep supports only progressive error offsets")
+    if kcfg.error_mode == "insample" and kcfg.insample_window is None:
+        raise ValueError(
+            "run_cluster_sweep supports progressive or bounded-history insample "
+            "offsets; set KSegmentsConfig(insample_window=W) for insample"
+        )
     policies = tuple(policies)
     stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
     lane_rows, lane_nodes, lane_keys = [], [], []

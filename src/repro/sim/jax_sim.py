@@ -30,8 +30,15 @@ allocation at i = 0).  A training fraction is therefore *pure aggregation* —
 callers slice the per-execution outputs at ``n_train`` — and the fig7a/b/c
 fraction axis costs nothing extra on device.
 
-Offsets use the O(1) "progressive" error mode (the insample mode needs O(n)
-refit history); cross-check tests run the Python engine in the same mode.
+Both of the paper's error modes run on device.  "progressive" offsets are the
+O(1) running-max recurrence.  "insample" offsets — extremes of the *current*
+fit's residuals over history — cannot ride an unbounded carry, so the engine
+carries a fixed-size ring of the last ``insample_window`` observations
+``(u, runtime, peaks)`` and rescans it under the live fit at every prediction;
+observations that age out are frozen at their eviction-time residuals
+(monotone running maxima, so the bound stays conservative).  This is exactly
+``KSegmentsModel``'s bounded-history formulation (``insample_window=W``),
+and the parity tests hold the two bit-equal for histories within the window.
 The segment count ``k_eff`` is traced (static upper bound ``k``), so the fig8
 k-sweep is a ``vmap`` over k instead of one compile per k.
 """
@@ -46,6 +53,7 @@ import jax.numpy as jnp
 from repro.core import regression
 from repro.core.predictor import METHODS, retry_flags
 from repro.core.segmentation import segment_peaks_dynamic
+from repro.core.sizey import RAQ_EPS, SIZEY_QUANTILE_PCT, SIZEY_UNDER_PENALTY
 
 MIB_PER_GIB = 1024.0
 MAX_RETRIES = 64
@@ -74,6 +82,26 @@ def _predict(rt_stats, rt_over, seg_stats, seg_under, u, k: int, k_eff, interval
     bounds = jnp.where(s == k_eff - 1, r_e, bounds)  # exact last edge, as the Python model
     bounds = jnp.where(s >= k_eff, jnp.inf, bounds)
     v = regression.predict(seg_stats, u) + jnp.maximum(seg_under, 0.0)
+    v = v.at[0].set(jnp.where(v[0] < 0, floor_mib, v[0]))
+    v = jax.lax.cummax(v, axis=0)
+    return bounds, jnp.maximum(v, floor_mib)
+
+
+def _predict_rel(rt_stats, rt_over_rel, seg_stats, seg_under_rel, u, k: int, k_eff, interval_s: float, floor_mib: float):
+    """jnp twin of KSegmentsModel.predict with ``offset_mode="relative"`` —
+    the KS+ method: offsets are residuals normalized by the (floored)
+    prediction, rescaled by it at application time, so the safety margin
+    tracks the allocation's magnitude instead of being a fixed MiB amount."""
+    dt = rt_stats.dtype
+    raw = regression.predict(rt_stats, u)
+    r_e = raw - jnp.maximum(rt_over_rel, 0.0) * jnp.maximum(raw, interval_s)
+    r_e = jnp.maximum(r_e, interval_s)
+    s = jnp.arange(k)
+    bounds = (s + 1).astype(dt) * (r_e / k_eff.astype(dt))
+    bounds = jnp.where(s == k_eff - 1, r_e, bounds)
+    bounds = jnp.where(s >= k_eff, jnp.inf, bounds)
+    v = regression.predict(seg_stats, u)
+    v = v + jnp.maximum(seg_under_rel, 0.0) * jnp.maximum(v, floor_mib)
     v = v.at[0].set(jnp.where(v[0] < 0, floor_mib, v[0]))
     v = jax.lax.cummax(v, axis=0)
     return bounds, jnp.maximum(v, floor_mib)
@@ -271,6 +299,108 @@ def _ppm_prefix_values(gpeak, rt_samples, cap_mib, floor_mib):
     return jnp.maximum(val_orig, floor_mib), jnp.maximum(val_imp, floor_mib)
 
 
+def _sizey_prefix_values(u, gpeak, floor_mib):
+    """Sizey portfolio allocation for every step as one prefix program.
+
+    Mirrors ``core.sizey.SizeyPortfolio`` exactly: at step i both models are
+    fitted on observations j < i — the linear model via the same prefix-stats
+    construction as Witt, the quantile model via masked ranks over one global
+    sort (the PPM trick, with the target rank in exact integer arithmetic so
+    f32/f64 agree) — their one-step-ahead offsets are exclusive running
+    maxima, and the allocation-quality scores are exclusive prefix means over
+    j in [1, i).  Returns the winning model's offset + floored allocation at
+    each step ((B,); row 0 is masked by the scan's has_obs gate).
+    """
+    B = u.shape[0]
+    dt = u.dtype
+    steps = jnp.arange(B)
+    # linear model: step-i prefix fits, evaluated at the step's own input
+    upd = regression.update_stats(jnp.zeros((B, regression.NUM_STATS), dt), u, gpeak)
+    pref = jnp.concatenate([jnp.zeros((1, regression.NUM_STATS), dt), jnp.cumsum(upd, axis=0)[:-1]], axis=0)
+    intercept, slope = regression.fit(pref)
+    pred_lin = intercept + slope * u  # (B,)
+    # quantile model: the SIZEY_QUANTILE_PCT order statistic of peaks seen
+    # before step i (n seen = i), selected by 1-based rank among seen rows
+    order = jnp.argsort(gpeak)
+    p = gpeak[order]
+    seen = order[None, :] < steps[:, None]  # (B_steps, B_sorted)
+    rank = jnp.cumsum(seen.astype(jnp.int32), axis=1)
+    target = -((-SIZEY_QUANTILE_PCT * (steps - 1)) // 100) + 1  # ceil, exact ints
+    hit = seen & (rank == target[:, None])
+    pred_q = p[jnp.argmax(hit, axis=1)]  # step 0 has no hit -> p[0], masked later
+    preds = jnp.stack([pred_lin, pred_q])  # (2, B)
+    # per-model one-step-ahead offsets: exclusive cummax of underpredictions
+    # over j >= 1 (row 0's "model" never saw data, as on the host)
+    res = jnp.where(steps[None, :] >= 1, gpeak[None, :] - preds, -jnp.inf)
+    off = jnp.maximum(
+        jnp.concatenate([jnp.full((2, 1), -jnp.inf, dt), jax.lax.cummax(res, axis=1)[:, :-1]], axis=1),
+        0.0,
+    )
+    v = jnp.maximum(preds + off, floor_mib)  # each model's step-j proposal
+    # allocation-quality scores: exclusive prefix means of the efficiency
+    # ratio minus the penalized underprediction frequency
+    ratio = jnp.minimum(v, gpeak[None, :]) / jnp.maximum(jnp.maximum(v, gpeak[None, :]), RAQ_EPS)
+    under = (v < gpeak[None, :]).astype(dt)
+    m1 = (steps[None, :] >= 1).astype(dt)
+
+    def excl(a):  # exclusive cumsum along the step axis
+        return jnp.concatenate([jnp.zeros((2, 1), dt), jnp.cumsum(a, axis=1)[:, :-1]], axis=1)
+
+    cnt = jnp.maximum(steps - 1, 1).astype(dt)
+    score = (excl(ratio * m1) - SIZEY_UNDER_PENALTY * excl(under * m1)) / cnt[None, :]
+    choose_q = (steps >= 2) & (score[1] > score[0])  # cold start/ties -> linear
+    return jnp.where(choose_q, v[1], v[0])
+
+
+# ---------------------------------------------------------------------------
+# Bounded-history insample offsets: rescan the carried observation window
+# under the live fit (KSegmentsModel._observe_insample with insample_window).
+# ---------------------------------------------------------------------------
+
+
+def _window_residuals(rt_stats, seg_stats, hu, hrt, hpk, interval_s, floor_mib):
+    """Residuals of history rows under the fit of the given stats banks.
+
+    Args: hu (W,) shifted inputs, hrt (W,) runtimes, hpk (W, k) segment peaks.
+    Returns (rt_res (W,), seg_res (W, k), rt_rel (W,), seg_rel (W, k)) — the
+    absolute over/under-prediction residuals and their KS+-normalized twins
+    (divided by the floored prediction; ``KSegmentsModel._residuals``).
+    """
+    rt_pred = regression.predict(rt_stats, hu)  # (W,)
+    a, b = regression.fit(seg_stats)  # (k,), (k,)
+    seg_pred = a[None, :] + b[None, :] * hu[:, None]  # (W, k)
+    rt_res = rt_pred - hrt
+    seg_res = hpk - seg_pred
+    rt_rel = rt_res / jnp.maximum(rt_pred, interval_s)
+    seg_rel = seg_res / jnp.maximum(seg_pred, floor_mib)
+    return rt_res, seg_res, rt_rel, seg_rel
+
+
+def _window_offsets(rt_stats, seg_stats, hist, n_obs, ev, interval_s, floor_mib):
+    """Insample error offsets at prediction time: masked extremes of the
+    window residuals under the *current* fit, combined with the frozen
+    eviction-time extremes (max is ring-order-invariant, so the ring buffer
+    needs no unrolling).
+
+    Args: hist = (hist_u, hist_rt, hist_pk) ring buffers, n_obs the traced
+    observation count, ev = (ev_rt, ev_seg, ev_rt_rel, ev_seg_rel) frozen
+    extremes (-inf when nothing has been evicted).
+    Returns (rt_over, seg_under, rt_over_rel, seg_under_rel).
+    """
+    hist_u, hist_rt, hist_pk = hist
+    ev_rt, ev_seg, ev_rt_rel, ev_seg_rel = ev
+    W = hist_u.shape[0]
+    rt_res, seg_res, rt_rel, seg_rel = _window_residuals(
+        rt_stats, seg_stats, hist_u, hist_rt, hist_pk, interval_s, floor_mib
+    )
+    filled = jnp.arange(W) < jnp.minimum(n_obs, W)
+    rt_over = jnp.maximum(jnp.max(jnp.where(filled, rt_res, -jnp.inf)), ev_rt)
+    seg_under = jnp.maximum(jnp.max(jnp.where(filled[:, None], seg_res, -jnp.inf), axis=0), ev_seg)
+    rt_over_rel = jnp.maximum(jnp.max(jnp.where(filled, rt_rel, -jnp.inf)), ev_rt_rel)
+    seg_under_rel = jnp.maximum(jnp.max(jnp.where(filled[:, None], seg_rel, -jnp.inf), axis=0), ev_seg_rel)
+    return rt_over, seg_under, rt_over_rel, seg_under_rel
+
+
 # ---------------------------------------------------------------------------
 # The multi-method engine.
 # ---------------------------------------------------------------------------
@@ -290,12 +420,26 @@ def _simulate_methods(
     floor_mib: float = 100.0,
     cap_mib: float = 128 * 1024.0,
     max_attempts: int | None = None,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
     dtype=jnp.float32,
 ):
     """Shared body of the multi-method engines (see the jitted entry points
     ``simulate_task_methods`` and ``simulate_task_ladders``).  ``dtype`` is
     the working precision: float32 (default), or float64 for the x64 ladder
-    variant (callers must hold an ``enable_x64`` context)."""
+    variant (callers must hold an ``enable_x64`` context).
+
+    ``error_mode="insample"`` switches the k-Segments family (including KS+)
+    to bounded-history insample offsets over the last ``insample_window``
+    observations (see module docstring); the window bound must be explicit
+    (>= 1) — the host parity twin is ``KSegmentsConfig(insample_window=W)``.
+    """
+    if error_mode not in ("progressive", "insample"):
+        raise ValueError(f"unknown error mode: {error_mode!r}")
+    if error_mode == "insample" and insample_window < 1:
+        raise ValueError("insample error mode needs an explicit history bound (insample_window >= 1)")
+    if error_mode == "progressive" and insample_window:
+        raise ValueError("insample_window only applies to error_mode='insample' (pass 0)")
     B, T = y.shape
     y = y.astype(dtype)
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -316,6 +460,7 @@ def _simulate_methods(
         if need & {"ppm", "ppm-improved"}
         else (zeros, zeros)
     )
+    sizey_vals = _sizey_prefix_values(u, gpeak, floor_mib) if "sizey" in need else zeros
 
     selective, cap_jump = retry_flags(methods)
     sel_flags = jnp.asarray(selective)
@@ -323,21 +468,42 @@ def _simulate_methods(
     inf_bounds = jnp.full((k,), jnp.inf, dtype)
     ones_k = jnp.ones((k,), dtype)
     need_ks = bool(need & {"ksegments-selective", "ksegments-partial"})
+    need_rel = "ksplus" in need
+    # Bounded insample offsets only matter for the k-Segments family; other
+    # methods ignore the mode, so an all-baseline scan skips the ring buffer.
+    use_insample = error_mode == "insample" and (need_ks or need_rel)
 
     def step(carry, inp):
-        rt_stats, rt_over, seg_stats, seg_under, i = carry
+        rt_stats, seg_stats, i = carry["rt_stats"], carry["seg_stats"], carry["i"]
         ui, yi, li, peaks_i, vals_i = inp
         has_obs = i >= 1
+
+        if use_insample:
+            hist = (carry["hist_u"], carry["hist_rt"], carry["hist_pk"])
+            ev = (carry["ev_rt"], carry["ev_seg"], carry["ev_rt_rel"], carry["ev_seg_rel"])
+            rt_over, seg_under, rt_over_rel, seg_under_rel = _window_offsets(
+                rt_stats, seg_stats, hist, i, ev, interval_s, floor_mib
+            )
+        else:
+            rt_over, seg_under = carry["rt_over"], carry["seg_under"]
+            rt_over_rel, seg_under_rel = carry["rt_over_rel"], carry["seg_under_rel"]
 
         if need_ks:
             ks_bounds, ks_values = _predict(
                 rt_stats, rt_over, seg_stats, seg_under, ui, k, k_eff, interval_s, floor_mib
+            )
+        if need_rel:
+            kp_bounds, kp_values = _predict_rel(
+                rt_stats, rt_over_rel, seg_stats, seg_under_rel, ui, k, k_eff, interval_s, floor_mib
             )
         rows_b, rows_v = [], []
         for m in methods:
             if m.startswith("ksegments"):
                 rows_b.append(jnp.where(has_obs, ks_bounds, inf_bounds))
                 rows_v.append(jnp.where(has_obs, ks_values, default_mib * ones_k))
+            elif m == "ksplus":
+                rows_b.append(jnp.where(has_obs, kp_bounds, inf_bounds))
+                rows_v.append(jnp.where(has_obs, kp_values, default_mib * ones_k))
             elif m == "default":
                 rows_b.append(inf_bounds)
                 rows_v.append(default_mib * ones_k)
@@ -365,32 +531,100 @@ def _simulate_methods(
             waste, retries, (vbuf, fbuf, wbuf, natt) = replayed
             out = (waste, retries, bounds_m, vbuf, fbuf, wbuf, natt)
 
-        # observe (progressive offsets: score-then-update)
+        # observe
         runtime = li.astype(dtype) * interval_s
-        has_data = rt_stats[regression.N] > 0
-        rt_pred = regression.predict(rt_stats, ui)
-        rt_over = jnp.where(has_data, jnp.maximum(rt_over, rt_pred - runtime), rt_over)
-        seg_pred = regression.predict(seg_stats, ui)
-        seg_under = jnp.where(has_data, jnp.maximum(seg_under, peaks_i - seg_pred), seg_under)
-        rt_stats = regression.update_stats(rt_stats, ui, runtime)
-        seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
-        return (rt_stats, rt_over, seg_stats, seg_under, i + 1), out
+        new_carry = {"i": i + 1}
+        if use_insample:
+            # Fold first: the host evicts under the post-fold fit, and the
+            # next prediction rescans the ring under these same stats.
+            rt_stats = regression.update_stats(rt_stats, ui, runtime)
+            seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
+            hist_u, hist_rt, hist_pk = hist
+            slot = jnp.mod(i, insample_window)
+            evict = i >= insample_window
+            rt_res, seg_res, rt_rel, seg_rel = _window_residuals(
+                rt_stats,
+                seg_stats,
+                hist_u[slot][None],
+                hist_rt[slot][None],
+                hist_pk[slot][None],
+                interval_s,
+                floor_mib,
+            )
+            ev_rt, ev_seg, ev_rt_rel, ev_seg_rel = ev
+            new_carry.update(
+                ev_rt=jnp.where(evict, jnp.maximum(ev_rt, rt_res[0]), ev_rt),
+                ev_seg=jnp.where(evict, jnp.maximum(ev_seg, seg_res[0]), ev_seg),
+                ev_rt_rel=jnp.where(evict, jnp.maximum(ev_rt_rel, rt_rel[0]), ev_rt_rel),
+                ev_seg_rel=jnp.where(evict, jnp.maximum(ev_seg_rel, seg_rel[0]), ev_seg_rel),
+                hist_u=hist_u.at[slot].set(ui),
+                hist_rt=hist_rt.at[slot].set(runtime),
+                hist_pk=hist_pk.at[slot].set(peaks_i),
+            )
+        else:
+            # progressive offsets: score-then-update
+            has_data = rt_stats[regression.N] > 0
+            rt_pred = regression.predict(rt_stats, ui)
+            rt_err = rt_pred - runtime
+            seg_pred = regression.predict(seg_stats, ui)
+            seg_err = peaks_i - seg_pred
+            new_carry.update(
+                rt_over=jnp.where(has_data, jnp.maximum(rt_over, rt_err), rt_over),
+                seg_under=jnp.where(has_data, jnp.maximum(seg_under, seg_err), seg_under),
+                rt_over_rel=jnp.where(
+                    has_data,
+                    jnp.maximum(rt_over_rel, rt_err / jnp.maximum(rt_pred, interval_s)),
+                    rt_over_rel,
+                ),
+                seg_under_rel=jnp.where(
+                    has_data,
+                    jnp.maximum(seg_under_rel, seg_err / jnp.maximum(seg_pred, floor_mib)),
+                    seg_under_rel,
+                ),
+            )
+            rt_stats = regression.update_stats(rt_stats, ui, runtime)
+            seg_stats = regression.update_stats(seg_stats, ui, peaks_i)
+        new_carry.update(rt_stats=rt_stats, seg_stats=seg_stats)
+        return new_carry, out
 
-    init = (
-        regression.empty_stats(dtype=dtype),
-        jnp.asarray(0.0, dtype),
-        regression.empty_stats(k, dtype=dtype),
-        jnp.zeros((k,), dtype),
-        jnp.asarray(0, jnp.int32),
-    )
-    per_step_vals = {"witt-lr": witt_std, "witt-lr-max": witt_max, "ppm": ppm_orig, "ppm-improved": ppm_imp}
+    init = {
+        "rt_stats": regression.empty_stats(dtype=dtype),
+        "seg_stats": regression.empty_stats(k, dtype=dtype),
+        "i": jnp.asarray(0, jnp.int32),
+    }
+    if use_insample:
+        W = insample_window
+        init.update(
+            hist_u=jnp.zeros((W,), dtype),
+            hist_rt=jnp.zeros((W,), dtype),
+            hist_pk=jnp.zeros((W, k), dtype),
+            ev_rt=jnp.asarray(-jnp.inf, dtype),
+            ev_seg=jnp.full((k,), -jnp.inf, dtype),
+            ev_rt_rel=jnp.asarray(-jnp.inf, dtype),
+            ev_seg_rel=jnp.full((k,), -jnp.inf, dtype),
+        )
+    else:
+        init.update(
+            rt_over=jnp.asarray(0.0, dtype),
+            seg_under=jnp.zeros((k,), dtype),
+            rt_over_rel=jnp.asarray(0.0, dtype),
+            seg_under_rel=jnp.zeros((k,), dtype),
+        )
+    per_step_vals = {
+        "witt-lr": witt_std,
+        "witt-lr-max": witt_max,
+        "ppm": ppm_orig,
+        "ppm-improved": ppm_imp,
+        "sizey": sizey_vals,
+    }
     xs = (u, y, lengths, peaks_all, per_step_vals)
     _, outs = jax.lax.scan(step, init, xs)
     return outs
 
 
 @functools.partial(
-    jax.jit, static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib")
+    jax.jit,
+    static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib", "error_mode", "insample_window"),
 )
 def simulate_task_methods(
     x,
@@ -405,6 +639,8 @@ def simulate_task_methods(
     factor: float = 2.0,
     floor_mib: float = 100.0,
     cap_mib: float = 128 * 1024.0,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
 ):
     """Score every requested method on one task type's executions in one scan.
 
@@ -431,13 +667,26 @@ def simulate_task_methods(
         factor=factor,
         floor_mib=floor_mib,
         cap_mib=cap_mib,
+        error_mode=error_mode,
+        insample_window=insample_window,
     )
     return waste.T, retries.T  # (M, B)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("methods", "k", "interval_s", "factor", "floor_mib", "cap_mib", "max_attempts", "x64"),
+    static_argnames=(
+        "methods",
+        "k",
+        "interval_s",
+        "factor",
+        "floor_mib",
+        "cap_mib",
+        "max_attempts",
+        "x64",
+        "error_mode",
+        "insample_window",
+    ),
 )
 def simulate_task_ladders(
     x,
@@ -454,6 +703,8 @@ def simulate_task_ladders(
     cap_mib: float = 128 * 1024.0,
     max_attempts: int = 32,
     x64: bool = False,
+    error_mode: str = "progressive",
+    insample_window: int = 0,
 ):
     """The cluster scheduler's device program: the same online scan as
     ``simulate_task_methods``, but returning every execution's full retry
@@ -492,6 +743,8 @@ def simulate_task_ladders(
         floor_mib=floor_mib,
         cap_mib=cap_mib,
         max_attempts=max_attempts,
+        error_mode=error_mode,
+        insample_window=insample_window,
         dtype=jnp.float64 if x64 else jnp.float32,
     )
     return {

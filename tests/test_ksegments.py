@@ -148,3 +148,39 @@ def test_predict_batch_bitwise_matches_predict():
 @given(st.integers(0, 2**31 - 1), st.sampled_from(["progressive", "insample"]))
 def test_property_predict_batch_bitwise(seed, mode):
     _check_predict_batch_bitwise(seed, mode)
+
+
+# -- insample offset maintenance vs brute-force oracles ----------------------
+
+
+def _exact_insample_extremes(m):
+    """Brute-force O(n) exact rescan: the extreme residuals of the CURRENT fit
+    over the full history (what the lazy drift-bounded offsets must cover)."""
+    from repro.core import regression
+
+    n = m._n_obs
+    rt_fit = regression.fit_np(m._rt_stats)
+    seg_fit = regression.fit_np(m._seg_stats)
+    hu = m._hist_u[:n]
+    rt_res = (rt_fit[0] + rt_fit[1] * hu) - m._hist_rt[:n]
+    seg_pred = seg_fit[0][None, :] + seg_fit[1][None, :] * hu[:, None]
+    seg_res = m._hist_peaks[:n] - seg_pred
+    return float(rt_res.max()), np.max(seg_res, axis=0)
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1e-3, 0.1, 0.5]))
+def test_property_insample_drift_bound_covers_exact_rescan(seed, tol):
+    """offset + drift must dominate the brute-force exact rescan after EVERY
+    observation — the conservativeness guarantee ``predict`` relies on.  Large
+    tolerances widen the lazy-refresh gaps, which is exactly where a stale
+    extreme could escape the bound (the bug this test pins)."""
+    rng = np.random.default_rng(seed)
+    m = KSegmentsModel(KSegmentsConfig(k=3, error_mode="insample", insample_refresh_tol=tol))
+    for _ in range(int(rng.integers(3, 25))):
+        x = float(rng.uniform(0.1, 50))
+        j = int(rng.integers(2, 60))
+        m.observe(x, rng.uniform(1, 10000, j))
+        exact_rt, exact_seg = _exact_insample_extremes(m)
+        assert m._rt_over_err + m._rt_drift >= exact_rt - 1e-7 * (abs(exact_rt) + 1.0)
+        assert np.all(m._seg_under_err + m._seg_drift >= exact_seg - 1e-7 * (np.abs(exact_seg) + 1.0))

@@ -1,0 +1,261 @@
+"""Parity suite for the predictor zoo on the multi-method device engine.
+
+Three layers of cross-checks against the sequential host oracles:
+
+* Per-attempt ladder parity (``simulate_task_ladders`` via
+  ``compute_cluster_ladders``) for every zoo method on sarek-style traces —
+  realized allocation rows, failure indices, and per-attempt wastage — on
+  both the f32 and the f64 ladder; the f64 ladder must match the float64
+  numpy oracle tightly, the f32 ladder in bulk.
+* Grid parity of the new methods (sizey, ksplus) and the insample error mode
+  on the device scan path (``simulate_grid`` vs ``simulate_suite``).
+* The bounded-window edge: with history longer than the window the device
+  engine must still match the host model run with the same
+  ``insample_window`` (they are recurrence twins), must NOT match the
+  unbounded host model bit-for-bit (the bound is real), and its offsets must
+  stay conservative w.r.t. a brute-force window-only rescan.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.allocation import StepAllocation, score_attempt_np
+from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
+from repro.core.predictor import make_method
+from repro.sim.batch_engine import compute_cluster_ladders, simulate_grid
+from repro.sim.simulator import SimConfig, simulate_suite
+from repro.sim.traces import generate_sarek
+
+CAP_MIB = 128 * 1024.0
+MAX_ATTEMPTS = 32
+MIN_EXECS = 10
+ZOO = ("sizey", "ksplus", "ksegments-selective", "ksegments-partial", "ppm-improved", "witt-lr")
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    return generate_sarek(seed=11, scale=0.12)
+
+
+@pytest.fixture(scope="module")
+def traces(workflow):
+    return workflow.eligible_tasks(MIN_EXECS)[:3]
+
+
+def _host_ladders(trace, method_name, kcfg):
+    """Sequential oracle: every execution's full retry ladder under one
+    method — (realized allocation row a(t), failure index, wastage) per
+    attempt, following exactly the simulator's retry protocol."""
+    m = make_method(method_name, trace.default_mib, CAP_MIB, kcfg)
+    rows = []
+    for e in trace.executions:
+        y = np.asarray(e.series, np.float64)
+        t = (np.arange(len(y)) + 0.5) * kcfg.interval_s
+        alloc = m.predict(e.input_size)
+        cur = StepAllocation(np.asarray(alloc.boundaries, np.float64).copy(), np.minimum(alloc.values, CAP_MIB))
+        attempts = []
+        for _ in range(MAX_ATTEMPTS):
+            out = score_attempt_np(y, kcfg.interval_s, cur)
+            attempts.append((cur.at(t), out.failure_index, out.wastage_gib_s))
+            if not out.failed:
+                break
+            seg = cur.segment_of((out.failure_index + 0.5) * kcfg.interval_s)
+            nxt = m.on_failure(cur, seg, CAP_MIB)
+            cur = StepAllocation(nxt.boundaries, np.minimum(nxt.values, CAP_MIB))
+        m.observe(e.input_size, y)
+        rows.append(attempts)
+    return rows
+
+
+def _device_ladders(traces, methods, kcfg, x64):
+    return compute_cluster_ladders(list(traces), methods, CAP_MIB, kcfg, MAX_ATTEMPTS, x64=x64)
+
+
+@pytest.fixture(scope="module")
+def ladders_f64(traces):
+    kcfg = KSegmentsConfig(error_mode="progressive")
+    return _device_ladders(traces, ZOO, kcfg, x64=True)
+
+
+@pytest.fixture(scope="module")
+def ladders_f32(traces):
+    kcfg = KSegmentsConfig(error_mode="progressive")
+    return _device_ladders(traces, ZOO, kcfg, x64=False)
+
+
+@pytest.mark.parametrize("method", ZOO)
+def test_ladder_parity_f64_per_attempt(traces, ladders_f64, method):
+    """The f64 device ladder reproduces the sequential oracle per attempt:
+    same attempt count, same failure samples, same realized allocations and
+    wastage to float64 round-off."""
+    kcfg = KSegmentsConfig(error_mode="progressive")
+    for trace in traces:
+        host = _host_ladders(trace, method, kcfg)
+        dev = ladders_f64[(trace.workflow, trace.name)]
+        for i, (e, h_atts) in enumerate(zip(trace.executions, host)):
+            lad = dev.row(method, i)
+            assert lad.n_attempts == len(h_atts)
+            t = (np.arange(len(e.series)) + 0.5) * kcfg.interval_s
+            for a, (h_row, h_fi, h_w) in enumerate(h_atts):
+                assert int(lad.failure_index[a]) == int(h_fi)
+                np.testing.assert_allclose(lad.alloc(a).at(t), h_row, rtol=1e-9, atol=1e-6)
+                np.testing.assert_allclose(lad.wastage_gib_s[a], h_w, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("method", ZOO)
+def test_ladder_parity_f32_bulk(traces, ladders_f32, method):
+    """The f32 ladder agrees in bulk: knife-edge rounding may flip rare
+    failure decisions, but attempt counts and wastage must track the oracle
+    on the vast majority of executions."""
+    kcfg = KSegmentsConfig(error_mode="progressive")
+    for trace in traces:
+        host = _host_ladders(trace, method, kcfg)
+        dev = ladders_f32[(trace.workflow, trace.name)]
+        n = len(host)
+        match_attempts = 0
+        waste_dev, waste_host = [], []
+        for i, h_atts in enumerate(host):
+            lad = dev.row(method, i)
+            if lad.n_attempts == len(h_atts):
+                match_attempts += 1
+            waste_dev.append(lad.total_wastage_gib_s)
+            waste_host.append(sum(w for _, _, w in h_atts))
+        assert match_attempts / n > 0.9
+        np.testing.assert_allclose(np.sum(waste_dev), np.sum(waste_host), rtol=0.05, atol=1e-3)
+        close = np.isclose(waste_dev, waste_host, rtol=0.05, atol=0.5)
+        assert close.mean() > 0.9
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_insample_ladder_parity_f64(traces, window):
+    """Bounded-history insample on the ladder path: the f64 device scan and
+    the host model with the same ``insample_window`` are recurrence twins —
+    per-attempt parity to round-off, including histories far past the
+    window."""
+    kcfg = KSegmentsConfig(error_mode="insample", insample_window=window)
+    methods = ("ksegments-selective", "ksplus")
+    dev = _device_ladders(traces, methods, kcfg, x64=True)
+    for trace in traces:
+        for method in methods:
+            host = _host_ladders(trace, method, kcfg)
+            for i, (e, h_atts) in enumerate(zip(trace.executions, host)):
+                lad = dev[(trace.workflow, trace.name)].row(method, i)
+                assert lad.n_attempts == len(h_atts)
+                t = (np.arange(len(e.series)) + 0.5) * kcfg.interval_s
+                for a, (h_row, h_fi, h_w) in enumerate(h_atts):
+                    assert int(lad.failure_index[a]) == int(h_fi)
+                    np.testing.assert_allclose(lad.alloc(a).at(t), h_row, rtol=1e-9, atol=1e-6)
+
+
+def test_insample_grid_parity(workflow):
+    """The scan path (`simulate_grid`) exercises error_mode="insample" end to
+    end: per-cell agreement with the sequential suite run with the same
+    window, across the whole zoo's k-family."""
+    cfg = SimConfig(
+        min_executions=MIN_EXECS,
+        ksegments=KSegmentsConfig(error_mode="insample", insample_window=8),
+    )
+    methods = ("ksegments-selective", "ksegments-partial", "ksplus", "sizey")
+    res_b = simulate_grid([workflow], methods, (0.0, 0.5), cfg)
+    res_p = simulate_suite([workflow], methods, (0.0, 0.5), cfg)
+    assert len(res_b) == len(res_p) > 0
+    for b, p in zip(res_b, res_p):
+        assert (b.task, b.method, b.train_frac) == (p.task, p.method, p.train_frac)
+        wb, wp = np.asarray(b.wastage_gib_s), np.asarray(p.wastage_gib_s)
+        np.testing.assert_allclose(wb.sum(), wp.sum(), rtol=0.05, atol=1e-2)
+        if len(wb):
+            assert np.isclose(wb, wp, rtol=0.05, atol=0.5).mean() > 0.9
+
+
+def test_unbounded_insample_rejected_on_device(workflow):
+    """The sequential default (unbounded insample history) has no device
+    twin; the engine must refuse it loudly instead of silently running
+    progressive."""
+    cfg = SimConfig(min_executions=MIN_EXECS, ksegments=KSegmentsConfig(error_mode="insample"))
+    with pytest.raises(ValueError, match="insample_window"):
+        simulate_grid([workflow], ("ksegments-selective",), (0.5,), cfg)
+
+
+def _observe_series(model, rng, n):
+    """Feed n synthetic executions with enough fit drift that the bounded
+    window and the unbounded rescan genuinely disagree."""
+    for i in range(n):
+        x = float(rng.uniform(1, 5000))
+        steps = int(rng.integers(8, 40))
+        base = 80 + 0.6 * x + float(rng.normal(0, 40))
+        series = np.maximum(base * np.linspace(0.4, 1.0, steps) + rng.normal(0, 15, steps), 1.0)
+        model.observe(x, series)
+
+
+def test_bounded_window_diverges_from_unbounded_but_stays_conservative():
+    """History longer than the window: the bounded model must (a) differ
+    from the unbounded exact rescan — the bound is load-bearing, not
+    decorative — and (b) never fall below the brute-force residual extremes
+    of the rows still inside the window (the frozen evicted extremes only
+    ever add safety)."""
+    W, n = 8, 40
+    rng = np.random.default_rng(3)
+    bounded = KSegmentsModel(KSegmentsConfig(error_mode="insample", insample_window=W))
+    rng2 = np.random.default_rng(3)
+    unbounded = KSegmentsModel(KSegmentsConfig(error_mode="insample", insample_refresh_tol=0.0))
+    _observe_series(bounded, rng, n)
+    _observe_series(unbounded, rng2, n)
+
+    # (a) not bit-equal once evictions happened
+    assert not (
+        bounded._rt_over_err == unbounded._rt_over_err
+        and np.array_equal(bounded._seg_under_err, unbounded._seg_under_err)
+    )
+
+    # (b) conservative vs the window-only brute force under the current fit
+    from repro.core import regression
+
+    rt_fit = regression.fit_np(bounded._rt_stats)
+    seg_fit = regression.fit_np(bounded._seg_stats)
+    lo = n - W
+    rt_r, seg_r = bounded._residuals(
+        rt_fit, seg_fit, bounded._hist_u[lo:n], bounded._hist_rt[lo:n], bounded._hist_peaks[lo:n]
+    )
+    assert bounded._rt_over_err >= float(rt_r.max()) - 1e-12
+    assert np.all(bounded._seg_under_err >= np.max(seg_r, axis=0) - 1e-12)
+
+
+def test_bounded_window_equals_unbounded_within_window():
+    """While history still fits in the window, the bounded model is exactly
+    the unbounded exact rescan — bitwise, same arithmetic on the same rows."""
+    n = 12
+    rng = np.random.default_rng(7)
+    bounded = KSegmentsModel(KSegmentsConfig(error_mode="insample", insample_window=64))
+    rng2 = np.random.default_rng(7)
+    exact = KSegmentsModel(KSegmentsConfig(error_mode="insample", insample_refresh_tol=0.0))
+    for _ in range(n):
+        x = float(rng.uniform(1, 5000))
+        x2 = float(rng2.uniform(1, 5000))
+        steps = int(rng.integers(8, 40))
+        steps2 = int(rng2.integers(8, 40))
+        assert x == x2 and steps == steps2
+        series = np.maximum(80 + 0.6 * x + rng.normal(0, 15, steps), 1.0)
+        series2 = series.copy()
+        rng2.normal(0, 15, steps2)  # keep the twin stream aligned
+        bounded.observe(x, series)
+        exact.observe(x2, series2)
+        assert bounded._rt_over_err == exact._rt_over_err
+        np.testing.assert_array_equal(bounded._seg_under_err, exact._seg_under_err)
+
+
+def test_ksplus_relative_offsets_scale_with_prediction():
+    """KS+ semantics: the same residual history produces a larger absolute
+    safety margin at larger predictions (the offset is a percentage)."""
+    model = KSegmentsModel(KSegmentsConfig(error_mode="progressive", offset_mode="relative"))
+    rng = np.random.default_rng(1)
+    for i in range(12):
+        x = 100.0 * (i + 1)
+        steps = 20
+        series = 100 + 0.9 * x + rng.normal(0, 30, steps).cumsum().clip(min=0)
+        model.observe(x, np.maximum(series, 1.0))
+    assert model._seg_under_err.max() > 0  # some underprediction happened
+    lo = model.predict(200.0)
+    hi = model.predict(2000.0)
+    raw_lo = np.asarray([p for p in lo.values])
+    raw_hi = np.asarray([p for p in hi.values])
+    assert raw_hi[-1] > raw_lo[-1]  # margins grew with the prediction
