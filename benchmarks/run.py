@@ -9,10 +9,15 @@ figure's headline quantity).
   adaptive_k — per-task online k re-optimization vs fixed k=4 (paper Sec. V)
   kernels — Pallas kernels vs jnp-oracle timing on corpus-scale batches
   admission — serving HBM reservation wastage: segment-wise vs peak
-  serve — arrival-stream serving simulator (Poisson + bursty) through the
-          scalar and batched admission controllers, plus the 256-active
-          decision-throughput microbench; always writes BENCH_serve.json
-          (path override via REPRO_BENCH_SERVE_JSON)
+  serve — arrival-stream serving simulator (Poisson + bursty + diurnal)
+          through the scalar, batched, and sharded carried-timeline
+          admission engines (sharded rows carry per-shard/SLO/imbalance
+          fields; parity vs the per-shard scalar oracle is enforced), plus
+          the 256-active decision-throughput microbench with the
+          carried-vs-rebuild speedup; always writes BENCH_serve.json
+          (path override via REPRO_BENCH_SERVE_JSON).  --min-carried-speedup
+          X fails the run when the carried engine's per-decision win over
+          the rebuild-per-batch engine drops below X (CI canary)
   cluster — scheduler-level dynamic reservations vs static policies, on both
             engines, in two variants (standard 16-node + congested
             high-density 32-node full-policy sweep; --congested runs only
@@ -114,6 +119,9 @@ _FAILURES: list[str] = []
 # --min-speedup X: fail the run (exit 1) when a jitted path's warm speedup
 # lands below X — the CI perf canary for the cluster and serve benches.
 MIN_SPEEDUP: float | None = None
+# --min-carried-speedup X: same, for the serve microbench's carried-timeline
+# vs rebuild-per-batch per-decision ratio (the sharded control plane canary).
+MIN_CARRIED_SPEEDUP: float | None = None
 CONGESTED_ONLY = False
 SWEEP = False
 # Persistent-compile-cache state: directory actually enabled (None when the
@@ -463,40 +471,74 @@ CLUSTER_JSON = os.environ.get("REPRO_BENCH_CLUSTER_JSON", "BENCH_cluster.json")
 SERVE_JSON = os.environ.get("REPRO_BENCH_SERVE_JSON", "BENCH_serve.json")
 
 
+def _nan_null(x):
+    """JSON-legal payloads: nan -> null, recursively (strict JSON has no
+    NaN token; a no-decisions stream reports nan percentiles)."""
+    if isinstance(x, float) and np.isnan(x):
+        return None
+    if isinstance(x, dict):
+        return {k: _nan_null(v) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_nan_null(v) for v in x]
+    return x
+
+
 def bench_serve() -> None:
     """Serving admission at traffic scale: the arrival-stream simulator on
-    both controllers, plus the raw admission-decision microbench.
+    every admission engine, plus the raw admission-decision microbench.
 
-    Replays a Poisson and a bursty workload through the scalar
-    ``AdmissionController`` oracle and the device-batched
-    ``BatchedAdmissionController`` (identical decisions — parity-tested),
-    recording admitted/rejected/evicted counts, reservation wastage (GiB*s,
-    segment-wise vs peak), and admission-decision latency.  The microbench
-    isolates the decision hot path at >= 256 active requests: batches of 256
-    candidates scored warm, the acceptance bar for the batched engine.
-    Always writes machine-readable rows to ``BENCH_serve.json`` (path
-    override: ``REPRO_BENCH_SERVE_JSON``)."""
-    from repro.serve.admission import AdmissionController, BatchedAdmissionController
+    Replays Poisson, bursty, and diurnal workloads through the scalar
+    ``AdmissionController`` oracle, the device-batched
+    ``BatchedAdmissionController``, and the sharded carried-timeline
+    ``ShardedAdmissionController`` with its ``ShardedScalarController``
+    oracle (decision parity is ENFORCED for both pairs — a mismatch fails
+    the run), recording admitted/rejected/evicted counts, reservation
+    wastage (GiB*s, segment-wise vs peak), admission-decision latency, and
+    for sharded engines the per-shard rows, SLO accounting, and imbalance
+    ratios.  The microbench isolates the decision hot path at 256 and 1024
+    active requests: batches of 256 candidates scored warm; ``carried_speedup``
+    is the per-decision win of the carried-timeline engine over the
+    rebuild-per-batch engine at the largest scale, where the rebuild engine's
+    O(active) host reconstruction dominates (gated by
+    ``--min-carried-speedup``).  Always
+    writes machine-readable rows to ``BENCH_serve.json`` (path override:
+    ``REPRO_BENCH_SERVE_JSON``); nan percentiles serialize as null."""
+    from repro.serve.admission import (
+        AdmissionController,
+        BatchedAdmissionController,
+        ShardedAdmissionController,
+    )
     from repro.serve.stream import StreamConfig, run_stream
 
     n_req = max(int(400 * SCALE), 60)
+    n_shards = 4
     workloads = {
-        "poisson": StreamConfig(n_requests=n_req, rate_per_s=8.0, seed=SEED),
+        "poisson": StreamConfig(n_requests=n_req, rate_per_s=8.0, n_shards=n_shards, seed=SEED),
         "bursty": StreamConfig(
             n_requests=n_req,
             arrival="bursty",
             rate_per_s=40.0,
             burst_factor=8.0,
             hbm_budget_mib=150_000.0,
+            n_shards=n_shards,
+            seed=SEED,
+        ),
+        "diurnal": StreamConfig(
+            n_requests=n_req,
+            arrival="diurnal",
+            rate_per_s=12.0,
+            diurnal_amp=0.8,
+            hbm_budget_mib=80_000.0,
+            n_shards=n_shards,
             seed=SEED,
         ),
     }
     rows = []
     for wname, cfg in workloads.items():
         results = {}
-        for engine in ("scalar", "batched"):
+        for engine in ("scalar", "batched", "sharded-scalar", "sharded"):
             res = run_stream(cfg, engine)
-            if engine == "batched":
+            if engine in ("batched", "sharded"):
                 res = run_stream(cfg, engine)  # warm: first run paid jit compiles
             results[engine] = res
             _row(
@@ -507,53 +549,70 @@ def bench_serve() -> None:
                 f"wastage_gib_s={res.wastage['segmentwise_gib_s']:.1f}",
                 engine=engine,
             )
-            rows.append(
-                {
-                    "workload": wname,
-                    "engine": engine,
-                    "admitted": res.admitted,
-                    "rejected": res.rejected,
-                    "evicted": res.evicted,
-                    "finished": res.finished,
-                    "segmentwise_gib_s": round(res.wastage["segmentwise_gib_s"], 3),
-                    "peak_reservation_gib_s": round(res.wastage["peak_reservation_gib_s"], 3),
-                    "decisions_per_s": round(res.decisions_per_s, 1),
-                    "p50_latency_us": round(res.p50_latency_s * 1e6, 1),
-                    "p99_latency_us": round(res.p99_latency_s * 1e6, 1),
-                    "wall_s": round(res.wall_s, 4),
-                }
-            )
+            row = {
+                "workload": wname,
+                "engine": engine,
+                "admitted": res.admitted,
+                "rejected": res.rejected,
+                "evicted": res.evicted,
+                "finished": res.finished,
+                "segmentwise_gib_s": round(res.wastage["segmentwise_gib_s"], 3),
+                "peak_reservation_gib_s": round(res.wastage["peak_reservation_gib_s"], 3),
+                "decisions_per_s": round(res.decisions_per_s, 1),
+                "p50_latency_us": round(res.p50_latency_s * 1e6, 1),
+                "p99_latency_us": round(res.p99_latency_s * 1e6, 1),
+                "wall_s": round(res.wall_s, 4),
+                "slo": res.slo,
+            }
+            if res.shards is not None:
+                row["n_shards"] = n_shards
+                row["shards"] = res.shards
+                row["imbalance"] = res.imbalance
+            rows.append(row)
+        # decision parity is the acceptance bar, for BOTH engine pairs: the
+        # device batch program vs the scalar oracle, and the sharded
+        # carried-timeline engine vs the per-shard scalar oracle
+        if results["scalar"].decisions != results["batched"].decisions:
+            _fail(f"serve/{wname}: batched decisions diverge from the scalar oracle")
+        if results["sharded-scalar"].decisions != results["sharded"].decisions:
+            _fail(f"serve/{wname}: sharded decisions diverge from the per-shard oracle")
         sp = results["batched"].decisions_per_s / max(results["scalar"].decisions_per_s, 1e-9)
-        parity = results["scalar"].decisions == results["batched"].decisions
-        _row(f"serve/{wname}/speedup", 0.0, f"x={sp:.1f} decision_parity={parity}", engine="batch")
+        _row(f"serve/{wname}/speedup", 0.0, f"x={sp:.1f} decision_parity=True", engine="batch")
 
-    # -- microbench: decision throughput at 256 active requests (warm) ------
-    n_active, batch = 256, 256
+    # -- microbench: decision throughput at 256 and 1024 active (warm) ------
+    # Two scales because the engines scale differently: the rebuild-per-batch
+    # engine pays O(active) host probe-set reconstruction plus O(live) release
+    # bookkeeping per round, while the carried engine's device program scores
+    # against O(active / n_shards) carried events per lane.  The ratio is the
+    # tentpole number, so it is measured where the scaling shows (1024).
+    batch = 256
+    mb_shards = 8
+    scales = (256, 1024)
     rng = np.random.default_rng(SEED)
-    # probe just after the last resident admission, well inside every
-    # resident plan's reservation window: the decision must pack against
-    # 256 plans of live demand, not an expired (empty) profile
-    t_probe = n_active * 0.1 + 0.5
+    ids = [f"c{i}" for i in range(batch)]
+    plens = [int(rng.integers(100, 2000)) for _ in ids]
 
-    def _mk(cls):
-        c = cls(hbm_budget_mib=1e9, k=4, interval_s=1.0)
+    def _mk(cls, n_active, **kw):
+        c = cls(hbm_budget_mib=1e9, k=4, interval_s=1.0, **kw)
         r = np.random.default_rng(SEED + 1)
         for _ in range(40):
             plen = int(r.integers(100, 2000))
             steps = int(60 + plen * 0.05)
             c.observe(plen, (plen * 0.02 + 0.6 * np.arange(steps)).astype(np.float32))
+        # 0.05 s spacing keeps even the shortest resident plan (~65 s) alive
+        # at the probe for the largest scale (1024 * 0.05 + 0.5 = 51.7 s)
         for i in range(n_active):
-            if c.try_admit(f"res{i}", int(r.integers(100, 2000)), i * 0.1) is None:
+            if c.try_admit(f"res{i}", int(r.integers(100, 2000)), i * 0.05) is None:
                 raise RuntimeError("microbench budget must admit every resident request")
+        # probe just after the last resident admission, well inside every
+        # resident plan's reservation window: the decision must pack against
+        # n_active plans of live demand, not an expired (empty) profile
+        t_probe = n_active * 0.05 + 0.5
         if any(p.admitted_at + p.alloc.boundaries[-1] <= t_probe for p in c.active.values()):
             raise RuntimeError("t_probe must fall inside every resident reservation window")
-        return c
+        return c, t_probe
 
-    sc, bc = _mk(AdmissionController), _mk(BatchedAdmissionController)
-    ids = [f"c{i}" for i in range(batch)]
-    plens = [int(rng.integers(100, 2000)) for _ in ids]
-
-    def _round(ctl, batched):
+    def _round(ctl, batched, t_probe):
         if batched:
             got = ctl.try_admit_many(ids, plens, t_probe)
         else:
@@ -562,45 +621,94 @@ def bench_serve() -> None:
             if g is not None:
                 ctl.release(i_)
 
-    _round(bc, True)  # jit warmup
-    us = {}
+    mb_scales: dict[str, dict] = {}
+    reseeds_total = 0
     # record-only retrace audit on the warm microbench loop (the admission
     # probe-set bucket may legitimately step when residency churns, so this
     # path logs instead of gating — the cluster variants enforce)
     with _audit_counter() as cc:
-        for name, ctl, batched in (("scalar", sc, False), ("batched", bc, True)):
-            t0 = time.time()
-            n = 0
-            while time.time() - t0 < 1.0:
-                _round(ctl, batched)
-                n += 1
-            us[name] = (time.time() - t0) * 1e6 / (n * batch)
+        for n_active in scales:
+            engines = {}
+            # the scalar oracle rebuilds per decision — O(active) per call —
+            # so it is only timed at the small scale to bound the run
+            if n_active == scales[0]:
+                engines["scalar"] = (_mk(AdmissionController, n_active), False)
+            engines["batched"] = (_mk(BatchedAdmissionController, n_active), True)
+            engines["sharded"] = (
+                _mk(ShardedAdmissionController, n_active, n_shards=mb_shards),
+                True,
+            )
+            us = {}
+            for name, ((ctl, t_probe), batched) in engines.items():
+                _round(ctl, batched, t_probe)  # jit warmup
+                if name == "sharded":
+                    _round(ctl, batched, t_probe)  # carried L/Smax growth settles
+                t0 = time.time()
+                n = 0
+                while time.time() - t0 < 1.0:
+                    _round(ctl, batched, t_probe)
+                    n += 1
+                us[name] = (time.time() - t0) * 1e6 / (n * batch)
+            shc = engines["sharded"][0][0]
+            reseeds_total += shc.reseeds
+            entry = {
+                "n_active": n_active,
+                "batched_us_per_decision": round(us["batched"], 2),
+                "sharded_us_per_decision": round(us["sharded"], 2),
+                "carried_speedup": round(us["batched"] / us["sharded"], 2),
+                "reseeds": shc.reseeds,
+            }
+            if "scalar" in us:
+                entry["scalar_us_per_decision"] = round(us["scalar"], 2)
+                entry["speedup"] = round(us["scalar"] / us["batched"], 2)
+            mb_scales[str(n_active)] = entry
+            _row(
+                f"serve/microbench/{n_active}",
+                us["batched"],
+                f"n_active={n_active} batch={batch} sharded_us={us['sharded']:.1f} "
+                f"carried_speedup={entry['carried_speedup']:.1f}x reseeds={shc.reseeds}",
+                engine="batch",
+            )
     retrace_audit = _audit_payload(cc, "serve/microbench", enforce=False)
-    speedup = us["scalar"] / us["batched"]
+    speedup = mb_scales[str(scales[0])]["speedup"]
+    # the tentpole ratio: one carried-timeline dispatch per batch vs the
+    # rebuild-per-batch probe-set reconstruction, per decision — gated at the
+    # largest scale, where the rebuild engine's O(active) host cost dominates
+    gate_at = scales[-1]
+    carried_speedup = mb_scales[str(gate_at)]["carried_speedup"]
     _row(
-        "serve/microbench",
-        us["batched"],
-        f"n_active={n_active} batch={batch} scalar_us={us['scalar']:.1f} speedup={speedup:.1f}x",
-        engine="batch",
+        "serve/microbench_carried",
+        mb_scales[str(gate_at)]["sharded_us_per_decision"],
+        f"n_active={gate_at} batch={batch} "
+        f"batched_us={mb_scales[str(gate_at)]['batched_us_per_decision']:.1f} "
+        f"carried_speedup={carried_speedup:.1f}x reseeds={reseeds_total}",
+        engine="sharded",
     )
     payload = {
         "scale": SCALE,
         "seed": SEED,
         "rows": rows,
         "microbench": {
-            "n_active": n_active,
             "batch_size": batch,
-            "scalar_us_per_decision": round(us["scalar"], 2),
-            "batched_us_per_decision": round(us["batched"], 2),
-            "speedup": round(speedup, 2),
+            "n_shards": mb_shards,
+            "scales": mb_scales,
+            "speedup": speedup,
+            "carried_speedup": carried_speedup,
+            "carried_speedup_at": gate_at,
+            "reseeds": reseeds_total,
             "retrace_audit": retrace_audit,
         },
     }
     with open(SERVE_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(_nan_null(payload), f, indent=1)
     print(f"# wrote serving rows to {SERVE_JSON}", file=sys.stderr)
     if MIN_SPEEDUP is not None and speedup < MIN_SPEEDUP:
         _fail(f"serve/microbench: warm speedup {speedup:.2f} < --min-speedup {MIN_SPEEDUP}")
+    if MIN_CARRIED_SPEEDUP is not None and carried_speedup < MIN_CARRIED_SPEEDUP:
+        _fail(
+            f"serve/microbench: carried speedup {carried_speedup:.2f} < "
+            f"--min-carried-speedup {MIN_CARRIED_SPEEDUP}"
+        )
 
 
 def _cluster_variant(name: str, policies: tuple[str, ...], kw: dict) -> dict:
@@ -954,7 +1062,7 @@ BENCHES = {
 
 
 def main() -> None:
-    global SCALE, MIN_SPEEDUP, CONGESTED_ONLY, SWEEP
+    global SCALE, MIN_SPEEDUP, MIN_CARRIED_SPEEDUP, CONGESTED_ONLY, SWEEP
     args = sys.argv[1:]
     json_path = None
     if "--json" in args:
@@ -970,6 +1078,13 @@ def main() -> None:
             MIN_SPEEDUP = float(args[i + 1])
         except (IndexError, ValueError):
             raise SystemExit("--min-speedup requires a numeric argument")
+        del args[i : i + 2]
+    if "--min-carried-speedup" in args:
+        i = args.index("--min-carried-speedup")
+        try:
+            MIN_CARRIED_SPEEDUP = float(args[i + 1])
+        except (IndexError, ValueError):
+            raise SystemExit("--min-carried-speedup requires a numeric argument")
         del args[i : i + 2]
     if "--smoke" in args:
         # CI-sized run: small corpus, same code paths (used by the workflow's

@@ -64,6 +64,23 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
+def device_mesh(n_dev: int, axis: str = "shards"):
+    """A 1-D ``Mesh`` over the first ``n_dev`` visible devices.
+
+    The one mesh constructor for data-parallel ``shard_map`` callers (the
+    sharded admission control plane, the multi-device smoke canaries) —
+    kept here so CPU emulation via ``--xla_force_host_platform_device_count``
+    and real multi-device runs build meshes identically.  Raises if fewer
+    than ``n_dev`` devices are visible rather than silently wrapping."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < n_dev:
+        raise ValueError(f"need {n_dev} devices for mesh axis {axis!r}, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n_dev]), (axis,))
+
+
 def enable_compile_cache(path: str | None = None) -> str | None:
     """Point jax's persistent compilation cache at ``path`` (default: the
     ``REPRO_COMPILE_CACHE`` env var; no-op when neither is set).  Thresholds

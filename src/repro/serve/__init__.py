@@ -2,16 +2,29 @@
 # a continuous-batching engine, and the beyond-paper application of the
 # k-Segments predictor: segment-wise HBM admission control — as the scalar
 # oracle (AdmissionController), the device-batched engine
-# (BatchedAdmissionController.try_admit_many), and the arrival-stream
-# serving simulator (repro.serve.stream) that replays Poisson/bursty
-# workloads through either.
-from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.serve.admission import AdmissionController, BatchedAdmissionController, RequestPlan
+# (BatchedAdmissionController.try_admit_many), the sharded carried-timeline
+# control plane (ShardedAdmissionController, with ShardedScalarController
+# as its per-shard parity oracle), and the arrival-stream serving simulator
+# (repro.serve.stream) that replays Poisson/bursty/diurnal workloads
+# through any of them.
+from repro.serve.engine import make_admission_controller, make_decode_step, make_prefill_step
+from repro.serve.admission import (
+    AdmissionController,
+    BatchedAdmissionController,
+    RequestPlan,
+    ShardedAdmissionController,
+    ShardedScalarController,
+    shard_of,
+)
 
 __all__ = [
+    "make_admission_controller",
     "make_decode_step",
     "make_prefill_step",
     "AdmissionController",
     "BatchedAdmissionController",
+    "ShardedAdmissionController",
+    "ShardedScalarController",
     "RequestPlan",
+    "shard_of",
 ]

@@ -11,7 +11,7 @@ boundary, instead of reserving every request's worst-case peak at admission
 (the static baseline).  Wastage here = reserved-but-unused HBM x seconds —
 the paper's metric applied to serving.
 
-Two controllers implement the same policy:
+Three controllers implement the same policy:
 
 * ``AdmissionController`` — the sequential oracle: one Python
   ``demand_exceeds`` probe per candidate against a profile rebuilt from the
@@ -29,11 +29,22 @@ Two controllers implement the same policy:
   the device program runs in float64 (``jax.experimental.enable_x64``)
   because the profile's ``nextafter`` switch events are below float32
   resolution at serving timestamps.
+* ``ShardedAdmissionController`` — the long-lived control plane: the active
+  set is sharded across ``n_shards`` by a deterministic crc32 placement,
+  each shard owns ``budget / n_shards`` HBM, and the whole per-shard state
+  (clock-folded base demand, sorted event timeline, per-owner fold sums)
+  lives ON DEVICE between calls — ``sim.device_timeline.admission_epoch``
+  applies releases, folds the clock forward and decides the batch in one
+  dispatch, so nothing is rebuilt from host state per batch.  The per-shard
+  oracle is ``ShardedScalarController`` (one scalar ``AdmissionController``
+  per shard over the same placement), which the parity suite
+  (``tests/test_serve_sharded.py``) holds it to decision-for-decision.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -42,6 +53,7 @@ from repro.core.ksegments import KSegmentsConfig, KSegmentsModel
 from repro.core.timeline import (
     Timeline,
     demand_exceeds,
+    plan_profile_events,
     shared_probe_set,
     step_demand_profile,
 )
@@ -339,3 +351,410 @@ class BatchedAdmissionController(_AdmissionBase):
         if plan is not None:
             self._static_reserved -= float(plan.alloc.values[-1])
             self._prof.remove(request_id)
+
+
+# ---------------------------------------------------------------------------
+# Sharded carried-timeline control plane
+# ---------------------------------------------------------------------------
+
+
+def shard_of(request_id: str, n_shards: int) -> int:
+    """Deterministic request -> shard placement: crc32 of the id.  Python's
+    ``hash`` is salted per process, which would re-deal every replay — crc32
+    keeps placement (and therefore every per-shard decision sequence) a pure
+    function of the request ids."""
+    return zlib.crc32(str(request_id).encode()) % int(n_shards)
+
+
+class ShardedScalarController(_AdmissionBase):
+    """The per-shard oracle: ``n_shards`` independent scalar controllers.
+
+    Each shard is one ``AdmissionController`` owning ``budget / n_shards``
+    HBM; requests route by ``shard_of`` and all shards share ONE k-Segments
+    model (predictions are global — only admission state is sharded).  This
+    is the reference the carried-timeline engine is parity-tested against:
+    shard independence means a sequential per-shard replay defines the
+    sharded policy exactly.
+    """
+
+    def __init__(
+        self, hbm_budget_mib: float, k: int = 4, interval_s: float = 0.5, n_shards: int = 4
+    ):
+        super().__init__(hbm_budget_mib, k, interval_s)
+        self.n_shards = int(n_shards)
+        self.shard_budget = self.budget / self.n_shards
+        self._shards = [
+            AdmissionController(self.shard_budget, k, interval_s) for _ in range(self.n_shards)
+        ]
+        for c in self._shards:
+            c.model = self.model  # one shared predictor across shards
+
+    def shard_of(self, request_id: str) -> int:
+        return shard_of(request_id, self.n_shards)
+
+    def try_admit(self, request_id: str, prompt_len: int, now: float) -> RequestPlan | None:
+        plan = self._shards[self.shard_of(request_id)].try_admit(request_id, prompt_len, now)
+        if plan is not None:
+            self.active[request_id] = plan
+            self._static_reserved += float(plan.alloc.values[-1])
+        return plan
+
+    def try_admit_many(self, request_ids, prompt_lens, now) -> list[RequestPlan | None]:
+        ts = np.broadcast_to(np.asarray(now, dtype=np.float64), (len(request_ids),))
+        return [
+            self.try_admit(r, p, float(t)) for r, p, t in zip(request_ids, prompt_lens, ts)
+        ]
+
+    def release(self, request_id: str) -> None:
+        plan = self.active.pop(request_id, None)
+        if plan is not None:
+            self._static_reserved -= float(plan.alloc.values[-1])
+            self._shards[self.shard_of(request_id)].release(request_id)
+
+
+class ShardedAdmissionController(_AdmissionBase):
+    """Sharded admission on carried device timelines — the serving control
+    plane that lives across thousands of decision batches.
+
+    Same placement and per-shard policy as ``ShardedScalarController``
+    (decision parity is exact — tests/test_serve_sharded.py), but nothing is
+    rebuilt per batch: each shard's demand timeline, clock-folded base and
+    per-owner fold sums persist as device arrays between calls, and one
+    ``admission_epoch`` dispatch applies the queued releases, folds the
+    clock forward and decides the whole batch for every shard at once
+    (vmapped; ``shard_map`` across devices when more than one is visible).
+
+    Host-side bookkeeping is O(batch): a free-list of per-shard owner codes
+    (recycled only after a release is applied on device), the pending-release
+    queues, and capacity management — the timeline axis L grows by padding
+    (+inf tail keeps it sorted) sized from the device-reported live-event
+    count BEFORE a batch could overflow, so the in-program overflow flag is a
+    can't-happen guard (it triggers a host reseed from the active plan set
+    plus a replay, counted in ``reseeds``).
+
+    The batch clock must be non-decreasing across calls (folded events never
+    come back) — arrival streams are monotone by construction; a regressing
+    clock raises.
+    """
+
+    def __init__(
+        self,
+        hbm_budget_mib: float,
+        k: int = 4,
+        interval_s: float = 0.5,
+        n_shards: int = 4,
+        use_shard_map: bool | None = None,
+    ):
+        super().__init__(hbm_budget_mib, k, interval_s)
+        import jax
+
+        self.n_shards = int(n_shards)
+        self.shard_budget = self.budget / self.n_shards
+        if use_shard_map is None:
+            use_shard_map = jax.device_count() > 1
+        # the mesh wants equal per-device shard slices: the largest divisor
+        # of n_shards that the visible devices can carry
+        self.n_dev = (
+            max(d for d in range(1, min(jax.device_count(), self.n_shards) + 1) if self.n_shards % d == 0)
+            if use_shard_map
+            else 1
+        )
+        self._state = None  # (base0, tl_t, tl_d, tl_c, slot_fold) device arrays
+        self._L = 64  # per-shard timeline axis (grows by padding)
+        self._Smax = 64  # per-shard owner-code capacity (grows by padding)
+        self._free: list[list[int]] = [[] for _ in range(self.n_shards)]
+        self._next_slot = [0] * self.n_shards
+        self._pending_rel: list[list[int]] = [[] for _ in range(self.n_shards)]
+        self._code: dict[str, tuple[int, int]] = {}  # rid -> (shard, code)
+        self._evtimes: dict[str, np.ndarray] = {}  # rid -> event-time row (nan padded)
+        # event-time rows of queued releases: counted (vectorized) at the
+        # next batch, against the clock they were released under
+        self._pend_times: list[list[np.ndarray]] = [[] for _ in range(self.n_shards)]
+        self._n_live = np.zeros(self.n_shards, dtype=np.int64)
+        self._clock = -np.inf
+        self.reseeds = 0  # overflow-recovery reseeds (0 on healthy streams)
+
+    # -- policy -------------------------------------------------------------
+
+    def shard_of(self, request_id: str) -> int:
+        return shard_of(request_id, self.n_shards)
+
+    def _default_alloc(self) -> StepAllocation:
+        # the placeholder scales with the SHARD budget: each shard's oracle
+        # is a scalar controller over budget/n_shards, and parity requires
+        # the same flat 5% reservation it would use
+        return StepAllocation(np.asarray([1.0]), np.asarray([self.shard_budget * 0.05]))
+
+    # -- device-state plumbing ----------------------------------------------
+
+    def _ensure_state(self):
+        if self._state is not None:
+            return
+        import jax.numpy as jnp
+
+        from repro.sim.device_timeline import _x64_ctx
+
+        S, L, Smax = self.n_shards, self._L, self._Smax
+        with _x64_ctx():
+            self._state = (
+                jnp.zeros((S,)),
+                jnp.full((S, L), jnp.inf),
+                jnp.zeros((S, L)),
+                jnp.full((S, L), -1, jnp.int32),
+                jnp.zeros((S, Smax)),
+            )
+
+    def _grow_L(self, new_L: int):
+        import jax.numpy as jnp
+
+        from repro.sim.device_timeline import _x64_ctx
+
+        base0, tl_t, tl_d, tl_c, slot_fold = self._state
+        S, pad = self.n_shards, new_L - self._L
+        with _x64_ctx():
+            self._state = (
+                base0,
+                jnp.concatenate([tl_t, jnp.full((S, pad), jnp.inf, tl_t.dtype)], axis=1),
+                jnp.concatenate([tl_d, jnp.zeros((S, pad), tl_d.dtype)], axis=1),
+                jnp.concatenate([tl_c, jnp.full((S, pad), -1, tl_c.dtype)], axis=1),
+                slot_fold,
+            )
+        self._L = new_L
+
+    def _grow_smax(self, new_smax: int):
+        import jax.numpy as jnp
+
+        from repro.sim.device_timeline import _x64_ctx
+
+        base0, tl_t, tl_d, tl_c, slot_fold = self._state
+        pad = new_smax - self._Smax
+        with _x64_ctx():
+            self._state = (
+                base0,
+                tl_t,
+                tl_d,
+                tl_c,
+                jnp.concatenate(
+                    [slot_fold, jnp.zeros((self.n_shards, pad), slot_fold.dtype)], axis=1
+                ),
+            )
+        self._Smax = new_smax
+
+    def _alloc_code(self, s: int) -> int:
+        if self._free[s]:
+            return self._free[s].pop()
+        if self._next_slot[s] >= self._Smax:
+            from repro.sim.traces import fine_bucket
+
+            self._ensure_state()
+            self._grow_smax(fine_bucket(self._Smax + 1, floor=64))
+        code = self._next_slot[s]
+        self._next_slot[s] += 1
+        return code
+
+    def _reseed(self, t0: float):
+        """Rebuild the carried device state from the host plan set at ``t0``
+        — the recovery path for in-program overflow (and the correctness
+        anchor: the rebuilt state is exactly what the incremental splices
+        maintain, modulo float fold grouping)."""
+        import jax.numpy as jnp
+
+        from repro.sim.device_timeline import _x64_ctx
+
+        S, L, Smax = self.n_shards, self._L, self._Smax
+        base0 = np.zeros(S)
+        tl_t = np.full((S, L), np.inf)
+        tl_d = np.zeros((S, L))
+        tl_c = np.full((S, L), -1, np.int32)
+        slot_fold = np.zeros((S, Smax))
+        counts = np.zeros(S, dtype=np.int64)
+        per: list[list] = [[] for _ in range(S)]
+        for rid, plan in self.active.items():
+            s, code = self._code[rid]
+            rel = float(np.nextafter(plan.admitted_at + float(plan.alloc.boundaries[-1]), np.inf))
+            t, d = plan_profile_events(
+                plan.alloc.boundaries, plan.alloc.values, plan.admitted_at, rel
+            )
+            per[s].append((t, d, np.full(len(t), code, dtype=np.int32)))
+        for s in range(S):
+            if not per[s]:
+                continue
+            t = np.concatenate([e[0] for e in per[s]])
+            d = np.concatenate([e[1] for e in per[s]])
+            c = np.concatenate([e[2] for e in per[s]])
+            order = np.argsort(t, kind="stable")
+            t, d, c = t[order], d[order], c[order]
+            cut = int(np.searchsorted(t, t0, side="right"))
+            if cut:
+                base0[s] = np.cumsum(d[:cut])[-1]
+                np.add.at(slot_fold[s], c[:cut], d[:cut])
+            nf = len(t) - cut
+            assert nf <= L, "reseed must be preceded by sufficient _grow_L"
+            tl_t[s, :nf], tl_d[s, :nf], tl_c[s, :nf] = t[cut:], d[cut:], c[cut:]
+            counts[s] = nf
+        with _x64_ctx():
+            self._state = (
+                jnp.asarray(base0),
+                jnp.asarray(tl_t),
+                jnp.asarray(tl_d),
+                jnp.asarray(tl_c),
+                jnp.asarray(slot_fold),
+            )
+        self._n_live = counts
+        # pending releases are already reflected (released rids left
+        # ``active`` before this rebuild): their codes free immediately
+        for s in range(S):
+            self._free[s].extend(self._pending_rel[s])
+            self._pending_rel[s] = []
+        self._pend_times = [[] for _ in range(S)]
+        self.reseeds += 1
+
+    # -- admission ----------------------------------------------------------
+
+    def try_admit(self, request_id: str, prompt_len: int, now: float) -> RequestPlan | None:
+        return self.try_admit_many([request_id], [prompt_len], now)[0]
+
+    def try_admit_many(self, request_ids, prompt_lens, now) -> list[RequestPlan | None]:
+        from repro.sim.device_timeline import _x64_ctx, admission_epoch
+        from repro.sim.traces import bucket_size, fine_bucket
+
+        C = len(request_ids)
+        if C == 0:
+            return []
+        if self.model.n_observations == 0:
+            d = self._default_alloc()
+            bnd = np.tile(d.boundaries, (C, 1))
+            val = np.tile(d.values, (C, 1))
+        else:
+            bnd, val = self.model.predict_batch(np.asarray(prompt_lens, dtype=np.float64))
+        starts = np.broadcast_to(np.asarray(now, dtype=np.float64), (C,)).astype(np.float64)
+        t0 = float(starts[0])
+        if t0 < self._clock:
+            raise ValueError(
+                f"batch clock regressed: {t0} < {self._clock} (folded events never return)"
+            )
+        ends = starts + bnd[:, -1]
+        rels = np.nextafter(ends, np.inf)  # a plan holds through r_e inclusive
+        # the finite events a plan splices in (start + live switches +
+        # release): one row per candidate, nan where a switch never fires —
+        # at release, the entries still above the clock (the unfolded ones)
+        # tighten the Lp prefix of the following batches
+        sw_all = np.nextafter(starts[:, None] + bnd, np.inf)
+        live_all = np.isfinite(bnd) & (starts[:, None] + bnd < rels[:, None])
+        times_all = np.concatenate(
+            [starts[:, None], np.where(live_all, sw_all, np.nan), rels[:, None]], axis=1
+        )
+        S, k = self.n_shards, bnd.shape[1]
+        shards = [self.shard_of(r) for r in request_ids]
+        per: list[list[int]] = [[] for _ in range(S)]
+        for i, s in enumerate(shards):
+            per[s].append(i)
+        self._ensure_state()
+        codes = [self._alloc_code(s) for s in shards]
+        # capacity: worst case ignores the batch's own releases/folds, so
+        # growth (pure +inf padding — the sorted tail) runs strictly ahead of
+        # any possible in-program overflow
+        need = max(
+            int(self._n_live[s]) + (k + 2) * len(per[s]) for s in range(S)
+        )
+        if need > self._L:
+            self._grow_L(fine_bucket(need, floor=64))
+        # decision-prefix bucket: the probe tables only need the carried live
+        # events, and the queued releases (whose per-plan event counts the
+        # host tracks exactly) plus the fold only shrink the prefix below
+        # last batch's returned n_live — the O(L) tail stays out of the
+        # decision tensors (fine_bucket: the prefix is the hot axis).  A
+        # released plan's events still in the timeline are the ones above
+        # the clock (everything at or under it was folded at a prior t0);
+        # nan pads (dead switches) compare False and drop out
+        pend_ev = [
+            int((np.stack(rows) > self._clock).sum()) if rows else 0
+            for rows in self._pend_times
+        ]
+        Lp_need = max(int(self._n_live[s]) - pend_ev[s] for s in range(S))
+        Lp = min(self._L, fine_bucket(max(Lp_need, 1), floor=64))
+        Cb = fine_bucket(max(len(p) for p in per), floor=8)
+        Rb = bucket_size(max(max(len(q) for q in self._pending_rel), 1), floor=8)
+        st_p = np.full((S, Cb), np.inf)
+        en_p = np.full((S, Cb), -np.inf)
+        rl_p = np.full((S, Cb), -np.inf)
+        bnd_p = np.full((S, Cb, k), np.inf)
+        val_p = np.zeros((S, Cb, k))
+        code_p = np.full((S, Cb), -1, dtype=np.int32)
+        valid_p = np.zeros((S, Cb), dtype=bool)
+        codes_np = np.asarray(codes, dtype=np.int32)
+        for s in range(S):
+            iv = per[s]
+            n = len(iv)
+            st_p[s, :n], en_p[s, :n], rl_p[s, :n] = starts[iv], ends[iv], rels[iv]
+            bnd_p[s, :n], val_p[s, :n] = bnd[iv], val[iv]
+            code_p[s, :n], valid_p[s, :n] = codes_np[iv], True
+        rel_p = np.full((S, Rb), -1, dtype=np.int32)
+        rel_lists, self._pending_rel = self._pending_rel, [[] for _ in range(S)]
+        self._pend_times = [[] for _ in range(S)]
+        for s in range(S):
+            rel_p[s, : len(rel_lists[s])] = rel_lists[s]
+        prog = admission_epoch(self.n_dev, Lp)
+        batch = (st_p, en_p, rl_p, bnd_p, val_p, code_p, valid_p)
+        with _x64_ctx():
+            admits, overflow, n_live, *state = prog(
+                *self._state, rel_p, *batch, np.float64(t0), np.float64(self.shard_budget)
+            )
+        if bool(np.asarray(overflow).any()):
+            # can't-happen guard (growth pre-sizes L): rebuild from the host
+            # plan set — the queued releases are already reflected there —
+            # and replay this batch against the fresh state
+            self._grow_L(fine_bucket(2 * self._L + (k + 2) * C, floor=64))
+            self._reseed(t0)
+            rel_lists = [[] for _ in range(S)]
+            prog = admission_epoch(self.n_dev)  # replay probes the full axis
+            with _x64_ctx():
+                admits, overflow, n_live, *state = prog(
+                    *self._state,
+                    np.full((S, Rb), -1, dtype=np.int32),
+                    *batch,
+                    np.float64(t0),
+                    np.float64(self.shard_budget),
+                )
+            assert not bool(np.asarray(overflow).any()), "overflow after reseed"
+        self._state = tuple(state)
+        self._n_live = np.asarray(n_live, dtype=np.int64)
+        self._clock = t0
+        for s in range(S):  # releases applied on device: codes recycle now
+            self._free[s].extend(rel_lists[s])
+        admits = np.asarray(admits)
+        plans: list[RequestPlan | None] = []
+        pos = [0] * S
+        for i, rid in enumerate(request_ids):
+            s = shards[i]
+            j = pos[s]
+            pos[s] += 1
+            if bool(admits[s, j]):
+                plan = RequestPlan(rid, float(starts[i]), StepAllocation(bnd[i], val[i]))
+                self.active[rid] = plan
+                self._static_reserved += float(val[i, -1])
+                self._code[rid] = (s, codes[i])
+                self._evtimes[rid] = times_all[i]
+                plans.append(plan)
+            else:
+                self._free[s].append(codes[i])  # rejected: code never went live
+                plans.append(None)
+        return plans
+
+    def release(self, request_id: str) -> None:
+        plan = self.active.pop(request_id, None)
+        if plan is None:
+            return
+        self._static_reserved -= float(plan.alloc.values[-1])
+        s, code = self._code.pop(request_id)
+        # the code stays reserved until the release is applied on device —
+        # recycling it earlier would let a newcomer's events alias a plan
+        # still spliced into the carried timeline
+        self._pending_rel[s].append(code)
+        # events of this plan still in the carried timeline: everything at or
+        # before the clock was folded at a previous batch (and is accounted
+        # by slot_fold, not the event axis) — counting is deferred to the
+        # next batch, which still sees the same clock value
+        times = self._evtimes.pop(request_id, None)
+        if times is not None:
+            self._pend_times[s].append(times)

@@ -4,6 +4,10 @@
 ``decode_32k`` / ``long_500k`` it lowers with a ShapeDtypeStruct cache of
 seq_len slots (ragged per-request positions), exactly what a production
 engine holds between steps.
+
+Also the admission-engine registry (``make_admission_controller``): the
+single place that maps an engine name to a controller class, shared by
+``repro.serve.stream`` and ``benchmarks/run.py``.
 """
 
 from __future__ import annotations
@@ -15,6 +19,48 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models.model import decode_step, forward, init_cache
+
+# engine name -> controller class; "scalar" is the policy oracle, "batched"
+# the single-host device engine, "sharded" the carried-timeline control
+# plane, "sharded-scalar" its per-shard scalar reference (parity anchor)
+ADMISSION_ENGINES = ("scalar", "batched", "sharded", "sharded-scalar")
+
+
+def make_admission_controller(
+    engine: str,
+    *,
+    hbm_budget_mib: float,
+    k: int = 4,
+    interval_s: float = 0.5,
+    n_shards: int = 4,
+):
+    """Build an admission controller by engine name.
+
+    Single-host engines ("scalar", "batched") ignore ``n_shards``; the
+    sharded pair splits the budget ``n_shards`` ways with deterministic
+    crc32 request placement (``repro.serve.admission.shard_of``).  Engine
+    selection guidance lives in benchmarks/README.md.
+    """
+    from repro.serve.admission import (
+        AdmissionController,
+        BatchedAdmissionController,
+        ShardedAdmissionController,
+        ShardedScalarController,
+    )
+
+    if engine == "scalar":
+        return AdmissionController(hbm_budget_mib, k=k, interval_s=interval_s)
+    if engine == "batched":
+        return BatchedAdmissionController(hbm_budget_mib, k=k, interval_s=interval_s)
+    if engine == "sharded":
+        return ShardedAdmissionController(
+            hbm_budget_mib, k=k, interval_s=interval_s, n_shards=n_shards
+        )
+    if engine == "sharded-scalar":
+        return ShardedScalarController(
+            hbm_budget_mib, k=k, interval_s=interval_s, n_shards=n_shards
+        )
+    raise ValueError(f"unknown admission engine {engine!r} (one of {ADMISSION_ENGINES})")
 
 
 def cache_shape(cfg: ModelConfig, batch: int, max_len: int):

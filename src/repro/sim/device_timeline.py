@@ -159,6 +159,60 @@ def _tie_last(tl_t):
     )
 
 
+def _plan_events(t_start, b, v, release):
+    """One reservation's ~k+2 timeline events on device — the jnp twin of
+    ``core.timeline.plan_profile_events``: +v_0 at the start, each step delta
+    at ``nextafter`` past a boundary that fires before ``release`` (Eq. 1
+    steps are right-open), and -v_end at the release, where v_end counts only
+    the switches that actually fired.  Unfired switches park at +inf with a
+    zero delta; the stable time sort keeps the host's event order on ties.
+
+    Returns ``(t_new (k+2,), d_new (k+2,), live (k,))``.  Shared by every
+    program that commits a placement into a carried timeline
+    (``_schedule_program``, ``_sweep_lane``, ``_admission_shard``), so the
+    event construction cannot drift from the host ``Timeline``'s.
+    """
+    sw = jnp.nextafter(t_start + b, jnp.inf)
+    live = jnp.isfinite(b) & (t_start + b < release)
+    steps = jnp.concatenate([jnp.diff(v), jnp.zeros((1,), v.dtype)])
+    vext = jnp.concatenate([v, v[-1:]])
+    v_end = vext[jnp.sum(live)]
+    t_new = jnp.concatenate([t_start[None], jnp.where(live, sw, jnp.inf), release[None]])
+    d_new = jnp.concatenate([v[:1], jnp.where(live, steps, 0.0), -v_end[None]])
+    order = jnp.argsort(t_new, stable=True)
+    return t_new[order], d_new[order], live
+
+
+def _splice_row(tn, t_new, channels):
+    """Splice time-sorted new events into one sorted (L,) timeline row,
+    ``side="right"``: time-tied newcomers land after existing events, exactly
+    the host ``Timeline._splice`` order.  Dead (+inf) slots pushed past the
+    axis are dropped (compare-counts instead of searchsorted: its scan
+    lowering is a sequential loop, the counts are one vectorized op).
+
+    ``channels`` is a list of ``(old (L,), new (n,), fill)`` payload arrays
+    spliced alongside the times (demand deltas, owner codes ...).  Returns
+    ``(t2, *payloads2)``.
+    """
+    L = tn.shape[0]
+    n = t_new.shape[0]
+    pos_new = jnp.sum(tn[None, :] <= t_new[:, None], axis=1) + jnp.arange(n)
+    old_tgt = jnp.arange(L) + jnp.sum(t_new[None, :] < tn[:, None], axis=1)
+    t2 = (
+        jnp.full((L,), jnp.inf, tn.dtype)
+        .at[old_tgt].set(tn, mode="drop")
+        .at[pos_new].set(t_new, mode="drop")
+    )
+    out = [t2]
+    for old, new, fill in channels:
+        out.append(
+            jnp.full((L,), fill, old.dtype)
+            .at[old_tgt].set(old, mode="drop")
+            .at[pos_new].set(new, mode="drop")
+        )
+    return tuple(out)
+
+
 def _fit_tables(tl_t, tl_d, base0):
     """Per-row precompute for the sparse fit probes: running sums and the
     range-max table over the tie-group-final cumulative demand.
@@ -649,33 +703,10 @@ def _schedule_program(tl_t, tl_d, base0, ev, h0, now0, bnd, val, run, pdur, vali
         def commit(args):
             tl_t, tl_d, ev_ = args
             end = t_f + dur
-            # the row's ~k+2 timeline events, exactly plan_profile_events'
-            sw = jnp.nextafter(t_f + b, jnp.inf)
-            live = jnp.isfinite(b) & (t_f + b < end)
-            steps = jnp.concatenate([jnp.diff(v), jnp.zeros((1,), v.dtype)])
-            vext = jnp.concatenate([v, v[-1:]])
-            v_end = vext[jnp.sum(live)]
-            t_new = jnp.concatenate([t_f[None], jnp.where(live, sw, jnp.inf), end[None]])
-            d_new = jnp.concatenate([v[:1], jnp.where(live, steps, 0.0), -v_end[None]])
-            order = jnp.argsort(t_new, stable=True)  # keeps host event order on ties
-            t_new, d_new = t_new[order], d_new[order]
-            # splice into the node's sorted timeline, side="right": new
-            # events after existing ties, dead (+inf) slots dropped
-            # (compare-counts instead of searchsorted: its scan lowering is
-            # a sequential loop, the counts are one vectorized op)
-            tn, dn = tl_t[node], tl_d[node]
-            pos_new = jnp.sum(tn[None, :] <= t_new[:, None], axis=1) + jnp.arange(k + 2)
-            old_tgt = jnp.arange(L) + jnp.sum(t_new[None, :] < tn[:, None], axis=1)
-            t2 = (
-                jnp.full((L,), jnp.inf, tn.dtype)
-                .at[old_tgt].set(tn, mode="drop")
-                .at[pos_new].set(t_new, mode="drop")
-            )
-            d2 = (
-                jnp.zeros((L,), dn.dtype)
-                .at[old_tgt].set(dn, mode="drop")
-                .at[pos_new].set(d_new, mode="drop")
-            )
+            # the row's ~k+2 timeline events (exactly plan_profile_events'),
+            # spliced into the node's sorted timeline side="right"
+            t_new, d_new, _ = _plan_events(t_f, b, v, end)
+            t2, d2 = _splice_row(tl_t[node], t_new, [(tl_d[node], d_new, 0.0)])
             return tl_t.at[node].set(t2), tl_d.at[node].set(d2), ev_.at[h0 + ridx].set(end)
 
         tl_t2, tl_d2, ev2 = jax.lax.cond(placed, commit, lambda a: a, (tl_t, tl_d, ev_f))
@@ -922,39 +953,19 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
             ran = ok & ~dead_any
             placed = found & ran
             end = t_f + dur
-            live = jnp.isfinite(b) & (t_f + b < end)
+            # the row's ~k+2 events spliced side="right" — byte-for-byte the
+            # commit of ``_schedule_program`` (the shared ``_plan_events`` /
+            # ``_splice_row`` pair).  Computed unconditionally on the placed
+            # node's (L,) slices and written back under a ``placed`` mask: a
+            # lax.cond here would batch (under the lane vmap) into a select
+            # over the whole (N, L) carry, copying it twice per row — masked
+            # single-node writes keep the per-row carry traffic at O(k L)
+            # and let XLA update the scan carry in place.
+            t_new, d_new, live = _plan_events(t_f, b, v, end)
             n_fin = jnp.sum(jnp.isfinite(tl_t[node]))
             over_loc = placed & (n_fin + 2 + jnp.sum(live) > L)
-
-            # the row's ~k+2 events spliced side="right" — byte-for-byte the
-            # commit of ``_schedule_program``.  Computed unconditionally on
-            # the placed node's (L,) slices and written back under a
-            # ``placed`` mask: a lax.cond here would batch (under the lane
-            # vmap) into a select over the whole (N, L) carry, copying it
-            # twice per row — masked single-node writes keep the per-row
-            # carry traffic at O(k L) and let XLA update the scan carry in
-            # place.
-            sw = jnp.nextafter(t_f + b, jnp.inf)
-            steps = jnp.concatenate([jnp.diff(v), jnp.zeros((1,), v.dtype)])
-            vext = jnp.concatenate([v, v[-1:]])
-            v_end = vext[jnp.sum(live)]
-            t_new = jnp.concatenate([t_f[None], jnp.where(live, sw, jnp.inf), end[None]])
-            d_new = jnp.concatenate([v[:1], jnp.where(live, steps, 0.0), -v_end[None]])
-            order = jnp.argsort(t_new, stable=True)
-            t_new, d_new = t_new[order], d_new[order]
             tn, dn = tl_t[node], tl_d[node]
-            pos_new = jnp.sum(tn[None, :] <= t_new[:, None], axis=1) + jnp.arange(k + 2)
-            old_tgt = jnp.arange(L) + jnp.sum(t_new[None, :] < tn[:, None], axis=1)
-            t2 = (
-                jnp.full((L,), jnp.inf, tn.dtype)
-                .at[old_tgt].set(tn, mode="drop")
-                .at[pos_new].set(t_new, mode="drop")
-            )
-            d2 = (
-                jnp.zeros((L,), dn.dtype)
-                .at[old_tgt].set(dn, mode="drop")
-                .at[pos_new].set(d_new, mode="drop")
-            )
+            t2, d2 = _splice_row(tn, t_new, [(dn, d_new, 0.0)])
             # probe state refresh for the placed node only: one O(L) running
             # sum (tie-masked in place) instead of an all-nodes rebuild
             tie_n = jnp.concatenate([t2[:-1] != t2[1:], jnp.isfinite(t2[-1:])])
@@ -1018,6 +1029,262 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
         dead,
         over,
     )
+
+
+# ---------------------------------------------------------------------------
+# The carried-admission program: the serving controller's active set as a
+# persistent device-resident control plane.  Where ``admission_program``
+# rebuilds its shared probe set from host state on every decision batch,
+# this program keeps each shard's demand timeline IN the program state
+# across thousands of batches — releases, clock folds and commits are all
+# incremental splices against the carried arrays.
+# ---------------------------------------------------------------------------
+
+
+def _admission_shard(
+    base0, tl_t, tl_d, tl_c, slot_fold, rel_codes,
+    starts, ends, rels, bnd, val, codes, valid, t0, budget,
+    Lp=None,
+):
+    """One shard's decision batch against its carried timeline.
+
+    Carried state (returned updated — the host keeps the returned arrays as
+    the next call's inputs, so the active set never leaves the device):
+      base0: () folded demand — the cumulative sum of every event at or
+        before the shard's clock (the in-carry twin of ``schedule_epoch``'s
+        host-side fold).
+      tl_t/tl_d: (L,) sorted future event times (+inf padded) and deltas.
+      tl_c: (L,) int32 owner codes per event (-1 = empty slot).
+      slot_fold: (Smax,) per-owner sums of the deltas already folded into
+        ``base0`` — what a release must subtract back out when its plan's
+        early events have long been folded away.
+
+    Batch inputs: ``rel_codes`` (Rb,) owner codes released since the last
+    call (-1 padded); candidates in arrival order as ``starts/ends/rels``
+    (Cb,), ``bnd/val`` (Cb, k), ``codes`` (Cb,) int32 fresh owner codes and
+    ``valid`` (Cb,); ``t0`` the batch clock (the first candidate's arrival —
+    monotone across calls, enforced by the host wrapper).
+
+    Steps: (1) releases — zero the released owners' future events (compact
+    the survivors left, preserving sort order) and subtract their folded
+    contributions from ``base0``; (2) fold — events at or before ``t0``
+    collapse into ``base0`` (left-to-right cumulative order, the host
+    profile's rounding) with per-owner sums scattered into ``slot_fold``,
+    and the timeline compacts; (3) a ``lax.scan`` decides candidates in
+    arrival order with the scalar oracle's exact probe expressions
+    (``demand_exceeds`` with ``inclusive_end=True``: the start, each own
+    switch instant under both of its filters, and every profile event in
+    (start, end] read at tie-group-final positions), splicing an admitted
+    candidate's events in before the next candidate probes.
+
+    ``Lp`` (static) is the decision-prefix length: the probe tables below
+    are built over ``tl[:Lp]`` only, sized by the host from the previous
+    batch's returned ``n_live`` (releases and the fold only shrink the live
+    prefix, so ``Lp >= n_live`` holds at decision time).  The full L axis is
+    touched only by the O(L) bookkeeping (releases, fold, final splice) —
+    that split is what keeps a long-lived timeline (large L, mostly +inf
+    padding) from taxing every decision.
+
+    Returns ``(admits (Cb,), overflow (), n_live (), *state)``; ``overflow``
+    flags a splice that would have run past L — or a live prefix past Lp —
+    (the host pre-sizes both from the returned ``n_live``, so this is a
+    can't-happen guard that triggers a reseed + replay).
+    """
+    L = tl_t.shape[0]
+    k = bnd.shape[1]
+    Smax = slot_fold.shape[0]
+    Lp = L if Lp is None else min(Lp, L)
+
+    # 1. releases: a released plan's future events vanish; its already-folded
+    # deltas leave through the per-owner fold sums.  Survivors compact left
+    # (stable, so the sorted order is preserved) — the freed slots are what
+    # keeps L sized by the *live* active set, not by churn.
+    rv = rel_codes >= 0
+    # membership via a scattered code table + gather: O(L + Rb), not the
+    # O(L * Rb) broadcast-compare (codes are unique per shard by the host's
+    # recycle-after-apply discipline, so the table is exact)
+    rel_mask = (
+        jnp.zeros((Smax + 1,), bool).at[jnp.where(rv, rel_codes, Smax)].set(True, mode="drop")
+    )
+    gone = rel_mask[jnp.where(tl_c >= 0, tl_c, Smax)]
+    base0 = base0 - jnp.sum(jnp.where(rv, slot_fold[jnp.clip(rel_codes, 0)], 0.0))
+    slot_fold = slot_fold.at[jnp.where(rv, rel_codes, Smax)].set(0.0, mode="drop")
+    keep = ~gone
+    tgt = jnp.cumsum(keep) - 1
+    dst = jnp.where(keep, tgt, L)
+    tl_t = jnp.full((L,), jnp.inf, tl_t.dtype).at[dst].set(tl_t, mode="drop")
+    tl_d = jnp.zeros((L,), tl_d.dtype).at[dst].set(tl_d, mode="drop")
+    tl_c = jnp.full((L,), -1, tl_c.dtype).at[dst].set(tl_c, mode="drop")
+
+    # 2. fold events at or before the batch clock into base0 (+ per-owner
+    # sums) and compact — every probe below is at or after t0, so the folded
+    # prefix only ever enters as its cumulative sum.
+    fold = tl_t <= t0
+    cnt = jnp.sum(fold).astype(jnp.int32)
+    dfold = jnp.where(fold, tl_d, 0.0)
+    base0 = base0 + jnp.cumsum(dfold)[-1]
+    slot_fold = slot_fold.at[jnp.where(fold & (tl_c >= 0), tl_c, Smax)].add(
+        dfold, mode="drop"
+    )
+    idx = jnp.arange(L) + cnt
+    kept = idx < L
+    idxc = jnp.minimum(idx, L - 1)
+    tl_t = jnp.where(kept, tl_t[idxc], jnp.inf)
+    tl_d = jnp.where(kept, tl_d[idxc], 0.0)
+    tl_c = jnp.where(kept, tl_c[idxc], -1)
+
+    # 3. fresh fold slots for this batch's candidate codes (the host only
+    # recycles a code after its release has been applied here, so these are
+    # already zero — the scatter is a cheap idempotent guard).
+    slot_fold = slot_fold.at[jnp.where(valid, codes, Smax)].set(0.0, mode="drop")
+
+    # 4. probe parts, precomputed VECTORIZED over the whole batch — the
+    # ``admission_program`` cost shape: the sequential scan below is down to
+    # a few fused elementwise passes per candidate, with no per-candidate
+    # sort/cumsum/scatter (those made the carried program slower than the
+    # rebuild-per-batch engine it exists to beat).
+    #
+    # Two shared probe families cover every point where combined demand can
+    # rise inside any candidate's window (extra points only re-sample the
+    # step function — the ``shared_probe_set`` argument):
+    #   * the carried timeline's event times, read at tie-group-final
+    #     positions (a partial mid-tie sum exists at no real time), and
+    #   * every candidate's start and live switch instants — each
+    #     candidate's own probe points AND each earlier-admitted candidate's
+    #     rise points.  Release events stay out of the family: a release is
+    #     a drop (allocations are nonnegative), and a drop point can never
+    #     carry the window maximum past a point already probed.
+    # Demand at a probe = carried profile + admitted-so-far batch demand +
+    # the probing candidate's own allocation; the first two live in the
+    # scan carry as per-family accumulators, everything else is a table.
+    pt = tl_t[:Lp]
+    pd = tl_d[:Lp]
+    # can't-happen guard: a live event beyond the decision prefix means the
+    # host undersized Lp — flag it through the same reseed+replay overflow
+    prefix_over = jnp.isfinite(tl_t[Lp]) if Lp < L else jnp.asarray(False)
+    cs = base0 + jnp.cumsum(pd)  # carried demand after event i
+    cs0 = jnp.concatenate([base0[None], cs])
+    tie = jnp.concatenate([pt[:-1] != pt[1:], jnp.isfinite(pt[-1:])])
+
+    # candidate event tables: (Cb, k+2) times/deltas in host splice order
+    t_new, d_new, live = jax.vmap(_plan_events)(starts, bnd, val, rels)
+    sw = jnp.nextafter(starts[:, None] + bnd, jnp.inf)
+    Q = jnp.concatenate(
+        [starts[:, None], jnp.where(live, sw, jnp.inf)], axis=1
+    ).reshape(-1)  # shared probe family 2: (Cb * (k+1),)
+
+    # carried profile at the Q points: all deltas at or before q
+    qprof = cs0[jnp.sum(pt[None, :] <= Q[:, None], axis=1)]
+    # windows: family 1 events in (start, end]; family 2 in [start, end]
+    # (the start point doubles as the scalar's first own probe; probing a
+    # same-time event at the start re-samples the identical demand value)
+    evwin = tie[None, :] & (pt[None, :] > starts[:, None]) & (pt[None, :] <= ends[:, None])
+    qwin = (Q[None, :] >= starts[:, None]) & (Q[None, :] <= ends[:, None])
+    # the probing candidate's own allocation at each probe point:
+    # min(#(b < probe - start), k-1), the scalar's step lookup
+    evself = jnp.take_along_axis(
+        val,
+        jnp.minimum(
+            jnp.sum(bnd[:, :, None] < (pt[None, :] - starts[:, None])[:, None, :], axis=1),
+            k - 1,
+        ),
+        axis=1,
+    )
+    qself = jnp.take_along_axis(
+        val,
+        jnp.minimum(
+            jnp.sum(bnd[:, :, None] < (Q[None, :] - starts[:, None])[:, None, :], axis=1),
+            k - 1,
+        ),
+        axis=1,
+    )
+    # an admitted candidate's contribution at each probe point: the sum of
+    # its event deltas at or before the point (cum-profile linearity; the
+    # release delta stays IN the contribution even though it is not a probe
+    # point — the value at any later probe must see the drop)
+    evcontrib = jnp.sum(d_new[:, :, None] * (t_new[:, :, None] <= pt[None, None, :]), axis=1)
+    qcontrib = jnp.sum(d_new[:, :, None] * (t_new[:, :, None] <= Q[None, None, :]), axis=1)
+
+    def cand_step(carry, x):
+        extra_ev, extra_q = carry
+        ew, qw, es, qs, ec, qc, ok = x
+        over = jnp.any(ew & (cs + extra_ev + es > budget)) | jnp.any(
+            qw & (qprof + extra_q + qs > budget)
+        )
+        admit = ok & ~over
+        return (
+            extra_ev + jnp.where(admit, ec, 0.0),
+            extra_q + jnp.where(admit, qc, 0.0),
+        ), admit
+
+    _, admits = jax.lax.scan(
+        cand_step,
+        (jnp.zeros_like(pd), jnp.zeros_like(Q)),
+        (evwin, qwin, evself, qself, evcontrib, qcontrib, valid),
+        unroll=4,
+    )
+
+    # 5. one batched splice: every admitted candidate's events merge into
+    # the carried timeline in a single stable sort (old events first on
+    # ties, then candidates in admission order — the host splice order).
+    new_t = jnp.where(admits[:, None], t_new, jnp.inf).reshape(-1)
+    new_d = jnp.where(admits[:, None], d_new, 0.0).reshape(-1)
+    new_c = (
+        jnp.broadcast_to(jnp.where(admits, codes, -1)[:, None], t_new.shape)
+        .astype(tl_c.dtype)
+        .reshape(-1)
+    )
+    # only the decision prefix can hold finite events (prefix_over guards
+    # the rest), so the sort runs over Lp + Cb*(k+2) lanes and the +inf tail
+    # rides along unsorted — concat keeps global order because both parts
+    # end in +inf padding
+    head_t = jnp.concatenate([pt, new_t])
+    head_d = jnp.concatenate([pd, new_d])
+    head_c = jnp.concatenate([tl_c[:Lp], new_c])
+    order = jnp.argsort(head_t, stable=True)
+    comb_t = jnp.concatenate([head_t[order], tl_t[Lp:]])
+    comb_d = jnp.concatenate([head_d[order], tl_d[Lp:]])
+    comb_c = jnp.concatenate([head_c[order], tl_c[Lp:]])
+    # a real event falling off the axis, or a live prefix past Lp
+    overflow = jnp.isfinite(comb_t[L]) | prefix_over
+    tl_t, tl_d, tl_c = comb_t[:L], comb_d[:L], comb_c[:L]
+    n_live = jnp.sum(jnp.isfinite(tl_t)).astype(jnp.int32)
+    return admits, overflow, n_live, base0, tl_t, tl_d, tl_c, slot_fold
+
+
+@functools.lru_cache(maxsize=None)
+def admission_epoch(n_dev: int = 1, Lp: int | None = None):
+    """The jitted carried-admission program over a leading shard axis S.
+
+    ``_admission_shard`` vmapped over shards (state/batch inputs carry a
+    leading S axis; ``t0``/``budget`` broadcast) and, for ``n_dev > 1``,
+    ``shard_map``-partitioned across that many devices via the
+    ``repro.compat`` shim — shards are independent (each owns its slice of
+    the budget), so the program needs no collectives and the mapped body is
+    embarrassingly parallel.  S must be divisible by ``n_dev``.
+
+    ``Lp`` is the static decision-prefix length (see ``_admission_shard``);
+    ``None`` probes the full timeline axis.
+
+    One compiled variant per (n_dev, Lp, shapes): warm decision batches at
+    seen (S, L, Lp, Smax, Cb, Rb, k) buckets must not retrace
+    (tests/test_retrace.py).
+    """
+    body = functools.partial(_admission_shard, Lp=Lp)
+    run = jax.vmap(body, in_axes=(0,) * 13 + (None, None))
+    if n_dev > 1:
+        from jax.sharding import PartitionSpec
+
+        from repro.compat import device_mesh, shard_map
+
+        sh, rep = PartitionSpec("shards"), PartitionSpec()
+        run = shard_map(
+            run,
+            mesh=device_mesh(n_dev),
+            in_specs=(sh,) * 13 + (rep, rep),
+            out_specs=(sh,) * 8,
+        )
+    return jax.jit(run)
 
 
 # Timeline-axis hint per padded grid signature: a grid that needed an

@@ -23,6 +23,7 @@ from repro.core.timeline import Timeline  # noqa: E402
 from repro.sim.batch_engine import bucket_size, pad_rows  # noqa: E402
 from repro.sim.device_timeline import (  # noqa: E402
     _x64_ctx,
+    admission_epoch,
     admission_program,
     first_fit_window,
     schedule_epoch,
@@ -89,6 +90,43 @@ def test_admission_program_warm_zero_retrace():
             assert bucket_size(C) == Cp
             with no_recompiles(f"admission C={C}"):
                 np.asarray(admission_program()(*_admission_args(C, Cp, Pp, seed), budget))
+
+
+def test_admission_epoch_warm_zero_retrace():
+    """The carried-admission program re-dispatches silently at seen
+    (S, L, Smax, Cb, Rb, k) buckets: decision batches, queued releases, and
+    the advancing clock are all value changes, never shape changes — the
+    whole point of a long-lived control plane is that batch #1000 costs the
+    same dispatch as batch #2."""
+    from repro.serve.admission import ShardedAdmissionController
+
+    rng = np.random.default_rng(0)
+    ctl = ShardedAdmissionController(50_000.0, k=4, interval_s=1.0, n_shards=2)
+    for _ in range(30):
+        plen = int(rng.integers(100, 2000))
+        ctl.observe(plen, (plen * 0.08 + 8.0 * np.arange(80)).astype(np.float32))
+
+    def run_batch(step: int, c: int, prev: list) -> list:
+        for rid in prev:  # releases match prior admits: a bounded live set
+            ctl.release(rid)
+        ids = [f"b{step}c{j}" for j in range(c)]
+        plens = [int(rng.integers(100, 2000)) for _ in range(c)]
+        got = ctl.try_admit_many(ids, plens, float(step))
+        return [r for r, p in zip(ids, got) if p is not None]
+
+    # pre-warm: climb the timeline-growth ladder to the steady L bucket
+    # (growth is a legitimate shape change — a new compile)
+    prev: list = []
+    for step in range(8):
+        prev = run_batch(step, 8, prev)
+    L_warm = ctl._L
+    # warm: counts drift inside the same Cb bucket, releases queued and
+    # applied, the clock advances — zero new traces, zero backend compiles
+    for step in range(8, 12):
+        with no_recompiles(f"admission_epoch step={step}"):
+            prev = run_batch(step, int(4 + step % 5), prev)
+    assert ctl._L == L_warm  # the audited batches sat at the steady bucket
+    assert ctl.reseeds == 0
 
 
 def test_first_fit_window_warm_zero_retrace():

@@ -1,0 +1,280 @@
+"""Parity of the sharded carried-timeline control plane against its oracles.
+
+``ShardedAdmissionController`` keeps per-shard demand timelines as device
+arrays carried across decision batches (one ``admission_epoch`` dispatch
+per batch: queued releases, clock fold, whole-batch decisions).
+``ShardedScalarController`` is the reference policy — independent scalar
+controllers over ``budget / n_shards`` with the same crc32 placement — so
+exact decision-sequence equality binds the carried engine to the paper's
+per-request semantics at every shard count.  The suite covers randomized
+admit/release/observe interleavings, the n_shards=1 anchor against the
+plain scalar controller, end-to-end stream parity on every arrival mix
+(including eviction storms), capacity growth without reseeds, and the
+``shard_map`` path on emulated multi-device CPU (subprocess).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.admission import (
+    AdmissionController,
+    ShardedAdmissionController,
+    ShardedScalarController,
+    shard_of,
+)
+from repro.serve.engine import make_admission_controller
+from repro.serve.stream import StreamConfig, generate_arrivals, run_stream
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _growth_series(plen, steps):
+    return (plen * 0.08 + 8.0 * np.arange(steps)).astype(np.float32)
+
+
+def _trained_pair(budget, rng, n_shards, n_obs=40):
+    oracle = ShardedScalarController(budget, k=4, interval_s=1.0, n_shards=n_shards)
+    dev = ShardedAdmissionController(budget, k=4, interval_s=1.0, n_shards=n_shards)
+    dev.model = oracle.model  # one predictor: admission state is what differs
+    for _ in range(n_obs):
+        plen = int(rng.integers(100, 2000))
+        oracle.observe(plen, _growth_series(plen, int(60 + plen * 0.05)))
+    return oracle, dev
+
+
+def _check_sharded_parity(seed: int, n_shards: int, steps: int = 50) -> None:
+    """Random admit/release/observe interleavings: decisions must match call
+    by call, and shared state (active set, reservation) after the stream."""
+    rng = np.random.default_rng(seed)
+    oracle, dev = _trained_pair(12_000.0, rng, n_shards)
+    now = 0.0
+    for step in range(steps):
+        op = rng.random()
+        if op < 0.6:
+            c = int(rng.integers(1, 9))
+            ids = [f"s{step}c{j}" for j in range(c)]
+            plens = [int(rng.integers(100, 2000)) for _ in range(c)]
+            nows = now + np.sort(rng.uniform(0.0, 0.5, c))
+            seq = oracle.try_admit_many(ids, plens, nows)
+            bat = dev.try_admit_many(ids, plens, nows)
+            assert [p is not None for p in seq] == [p is not None for p in bat], step
+            for a, b in zip(seq, bat):
+                if a is not None:
+                    np.testing.assert_array_equal(a.alloc.boundaries, b.alloc.boundaries)
+                    np.testing.assert_array_equal(a.alloc.values, b.alloc.values)
+            now = float(nows[-1])
+        elif op < 0.85 and oracle.active:
+            rid = str(rng.choice(sorted(oracle.active)))
+            oracle.release(rid)
+            dev.release(rid)
+        else:
+            plen = int(rng.integers(100, 2000))
+            oracle.observe(plen, _growth_series(plen, int(60 + plen * 0.05)))
+        now += float(rng.exponential(1.0))
+    assert set(oracle.active) == set(dev.active)
+    assert np.isclose(oracle._static_reserved, dev._static_reserved)
+    assert dev.reseeds == 0  # growth must pre-empt every in-program overflow
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_stream_parity(seed, n_shards):
+    _check_sharded_parity(seed, n_shards)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+def test_property_sharded_stream_parity(seed, n_shards):
+    _check_sharded_parity(seed, n_shards, steps=35)
+
+
+def test_single_shard_matches_plain_scalar():
+    """n_shards=1 is the whole budget on one shard: the carried engine must
+    reproduce the plain scalar controller decision for decision."""
+    rng = np.random.default_rng(7)
+    plain = AdmissionController(12_000.0, k=4, interval_s=1.0)
+    dev = ShardedAdmissionController(12_000.0, k=4, interval_s=1.0, n_shards=1)
+    dev.model = plain.model
+    for _ in range(40):
+        plen = int(rng.integers(100, 2000))
+        plain.observe(plen, _growth_series(plen, int(60 + plen * 0.05)))
+    now = 0.0
+    for step in range(40):
+        op = rng.random()
+        if op < 0.6:
+            c = int(rng.integers(1, 6))
+            ids = [f"p{step}c{j}" for j in range(c)]
+            plens = [int(rng.integers(100, 2000)) for _ in range(c)]
+            nows = now + np.sort(rng.uniform(0.0, 0.5, c))
+            seq = [plain.try_admit(r, p, float(t)) for r, p, t in zip(ids, plens, nows)]
+            bat = dev.try_admit_many(ids, plens, nows)
+            assert [p is not None for p in seq] == [p is not None for p in bat], step
+            now = float(nows[-1])
+        elif op < 0.85 and plain.active:
+            rid = str(rng.choice(sorted(plain.active)))
+            plain.release(rid)
+            dev.release(rid)
+        now += float(rng.exponential(1.0))
+
+
+def test_placement_deterministic_and_balanced():
+    """crc32 placement is a pure function of the id (no per-process salt)
+    and spreads a realistic id population across shards."""
+    ids = [f"r{i}" for i in range(4000)]
+    a = [shard_of(r, 4) for r in ids]
+    assert a == [shard_of(r, 4) for r in ids]
+    counts = np.bincount(a, minlength=4)
+    assert counts.min() > 0.7 * counts.mean()  # no starved shard
+
+
+def test_engine_registry():
+    for name in ("scalar", "batched", "sharded", "sharded-scalar"):
+        ctl = make_admission_controller(name, hbm_budget_mib=1000.0, n_shards=2)
+        assert ctl.budget == 1000.0
+    with pytest.raises(ValueError):
+        make_admission_controller("nope", hbm_budget_mib=1000.0)
+
+
+def test_clock_regression_raises():
+    dev = ShardedAdmissionController(1000.0, n_shards=2)
+    dev.try_admit_many(["a"], [100], 5.0)
+    with pytest.raises(ValueError):
+        dev.try_admit_many(["b"], [100], 4.0)
+
+
+def test_capacity_growth_without_reseed():
+    """Many concurrent actives push both the timeline axis L and the
+    owner-code axis Smax past their seeds; growth is pure padding — parity
+    holds and the overflow/reseed recovery path never fires."""
+    rng = np.random.default_rng(3)
+    oracle, dev = _trained_pair(10_000_000.0, rng, n_shards=1)
+    L0, S0 = dev._L, dev._Smax
+    for step in range(10):
+        ids = [f"g{step}c{j}" for j in range(8)]
+        plens = [int(rng.integers(100, 2000)) for _ in range(8)]
+        t = float(step)
+        a = [p is not None for p in oracle.try_admit_many(ids, plens, t)]
+        b = [p is not None for p in dev.try_admit_many(ids, plens, t)]
+        assert a == b == [True] * 8, step  # budget is huge: everything admits
+    assert len(dev.active) == 80
+    assert dev._L > L0 and dev._Smax > S0
+    assert dev.reseeds == 0
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty", "diurnal"])
+def test_run_stream_sharded_engine_parity(arrival):
+    """End to end through the simulator: identical decision sequences,
+    counts, wastage and makespan on the carried engine vs its oracle."""
+    cfg = StreamConfig(
+        n_requests=160,
+        n_warmup=32,
+        arrival=arrival,
+        rate_per_s=30.0 if arrival == "bursty" else 6.0,
+        n_shards=4,
+        seed=11,
+    )
+    ro = run_stream(cfg, "sharded-scalar")
+    rd = run_stream(cfg, "sharded")
+    assert ro.decisions == rd.decisions
+    assert (ro.admitted, ro.rejected, ro.evicted, ro.finished) == (
+        rd.admitted,
+        rd.rejected,
+        rd.evicted,
+        rd.finished,
+    )
+    assert ro.rejected > 0  # per-shard budgets bind, so parity is non-trivial
+    np.testing.assert_allclose(
+        ro.wastage["segmentwise_gib_s"], rd.wastage["segmentwise_gib_s"], rtol=1e-9
+    )
+    assert ro.makespan_s == rd.makespan_s
+    # sharded engines report per-shard rows + imbalance; counts cross-check
+    for r in (ro, rd):
+        assert len(r.shards) == 4
+        assert sum(row["decisions"] for row in r.shards) == len(r.decisions)
+        assert sum(row["admitted"] for row in r.shards) == r.admitted
+        assert r.imbalance["decisions_max_over_mean"] >= 1.0
+    assert [row["decisions"] for row in ro.shards] == [row["decisions"] for row in rd.shards]
+
+
+def test_run_stream_sharded_eviction_parity():
+    """Underpredicted series force the OOM backstop mid-stream: evictions
+    (device-side releases driven by the host backstop) must agree exactly."""
+    cfg = StreamConfig(
+        n_requests=120,
+        n_warmup=24,
+        rate_per_s=8.0,
+        hbm_budget_mib=20_000.0,
+        n_shards=2,
+        seed=2,
+    )
+    warm, arrivals = generate_arrivals(cfg)
+    for a in arrivals:
+        a.series = a.series * 3.0
+    ro = run_stream(cfg, "sharded-scalar", arrivals=(warm, arrivals))
+    rd = run_stream(cfg, "sharded", arrivals=(warm, arrivals))
+    assert ro.decisions == rd.decisions
+    assert ro.evicted == rd.evicted > 0
+    assert ro.admitted == rd.admitted and ro.finished == rd.finished
+    assert [row["evicted"] for row in ro.shards] == [row["evicted"] for row in rd.shards]
+
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import json
+import numpy as np
+import jax
+from repro.serve.admission import ShardedAdmissionController, ShardedScalarController
+
+rng = np.random.default_rng(0)
+oracle = ShardedScalarController(12_000.0, k=4, interval_s=1.0, n_shards=8)
+dev = ShardedAdmissionController(12_000.0, k=4, interval_s=1.0, n_shards=8, use_shard_map=True)
+dev.model = oracle.model
+for _ in range(40):
+    plen = int(rng.integers(100, 2000))
+    s = (plen * 0.08 + 8.0 * np.arange(int(60 + plen * 0.05))).astype(np.float32)
+    oracle.observe(plen, s)
+mism = 0
+now = 0.0
+for step in range(25):
+    c = int(rng.integers(1, 9))
+    ids = [f"s{step}c{j}" for j in range(c)]
+    plens = [int(rng.integers(100, 2000)) for _ in range(c)]
+    t = now + float(rng.uniform(0, 0.5))
+    a = [p is not None for p in oracle.try_admit_many(ids, plens, t)]
+    b = [p is not None for p in dev.try_admit_many(ids, plens, t)]
+    if a != b:
+        mism += 1
+    if step % 3 == 0 and oracle.active:
+        rid = str(rng.choice(sorted(oracle.active)))
+        oracle.release(rid)
+        dev.release(rid)
+    now = t + float(rng.exponential(1.0))
+print(json.dumps({"n_dev": dev.n_dev, "devices": jax.device_count(),
+                  "mismatches": mism, "active": len(dev.active),
+                  "reseeds": dev.reseeds}))
+"""
+
+
+def test_shard_map_multi_device_parity():
+    """The shard_map path on 8 emulated CPU devices (subprocess — this
+    process owns the single-device runtime) matches the per-shard oracle."""
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD, SRC], capture_output=True, text=True, timeout=600
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["n_dev"] == 8  # placement actually spans the mesh
+    assert out["mismatches"] == 0
+    assert out["reseeds"] == 0
+    assert out["active"] > 0

@@ -13,8 +13,9 @@ Two classes of bug are pinned here:
 """
 
 import numpy as np
+import pytest
 
-from repro.serve.stream import StreamConfig, generate_arrivals, run_stream
+from repro.serve.stream import StreamConfig, _actual_usage, generate_arrivals, run_stream
 
 
 def _bursty_cfg(**kw):
@@ -103,3 +104,110 @@ def test_warmup_deterministic_prefix():
     for a, b in zip(small, large[:8]):
         assert a.prompt_len == b.prompt_len
         np.testing.assert_array_equal(a.series, b.series)
+
+
+def _brute_force_kills(live, t, interval_s, budget):
+    """The pre-vectorization backstop, verbatim: recompute the O(live) total
+    on every kill iteration (O(live^2)) — the parity oracle for the
+    single-pass evictor now in run_stream."""
+    live = dict(live)
+    kills = []
+    while live and _actual_usage(live, t, interval_s) > budget:
+        rid = max(live, key=lambda r: (live[r][0], r))
+        live.pop(rid)
+        kills.append(rid)
+    return kills
+
+
+def _vectorized_kills(live, t, interval_s, budget):
+    """The run_stream evictor's algorithm: gather usage once, re-total
+    incrementally per pop."""
+    usage = {
+        rid: float(series[min(max(int((t - start) / interval_s), 0), len(series) - 1)])
+        for rid, (start, series) in live.items()
+    }
+    total = float(np.asarray(list(usage.values())).sum())
+    kills = []
+    for rid in sorted(live, key=lambda r: (live[r][0], r), reverse=True):
+        if total <= budget:
+            break
+        total -= usage[rid]
+        kills.append(rid)
+    return kills
+
+
+def test_evictor_matches_brute_force():
+    """Property check over random live sets: the single-pass evictor kills
+    exactly the requests the quadratic reference would, in the same order,
+    across budgets from kill-nothing to kill-everything."""
+    rng = np.random.default_rng(9)
+    for trial in range(40):
+        n = int(rng.integers(1, 30))
+        live = {
+            f"r{i}": (
+                float(rng.uniform(0.0, 50.0)),
+                (rng.uniform(100.0, 4000.0) + 8.0 * np.arange(int(rng.integers(4, 120)))).astype(
+                    np.float32
+                ),
+            )
+            for i in range(n)
+        }
+        t = float(rng.uniform(0.0, 80.0))
+        total = _actual_usage(live, t, 1.0)
+        for budget in (total * 1.1, total * 0.6, total * 0.2, 0.0):
+            assert _brute_force_kills(live, t, 1.0, budget) == _vectorized_kills(
+                live, t, 1.0, budget
+            ), (trial, budget)
+
+
+def test_high_eviction_stream_decision_parity():
+    """End to end under an eviction storm (tiny budget, 5x underprediction):
+    engines agree decision for decision and kill for kill — the vectorized
+    backstop changed complexity, not policy."""
+    cfg = _bursty_cfg(hbm_budget_mib=12_000.0)
+    warm, arrivals = generate_arrivals(cfg)
+    for a in arrivals:
+        a.series = a.series * 5.0
+    rs = run_stream(cfg, "scalar", arrivals=(warm, arrivals))
+    rb = run_stream(cfg, "batched", arrivals=(warm, arrivals))
+    assert rs.decisions == rb.decisions
+    assert rs.evicted == rb.evicted
+    assert rs.evicted > 10  # a storm, not a stray kill
+    assert rs.finished == rb.finished
+
+
+def test_empty_stream_reports_nan_latency():
+    """No decisions -> no measurement: percentiles are nan and throughput is
+    zero, never a fabricated 0.0-latency sample."""
+    res = run_stream(StreamConfig(n_requests=0, n_warmup=4), "batched")
+    assert np.isnan(res.p50_latency_s) and np.isnan(res.p99_latency_s)
+    assert res.decisions_per_s == 0.0
+    assert np.isnan(res.slo["violation_frac"]) and res.slo["violations"] == 0
+
+
+def test_nonempty_stream_reports_finite_latency_and_slo():
+    res = run_stream(StreamConfig(n_requests=40, n_warmup=8), "batched")
+    assert np.isfinite(res.p50_latency_s) and np.isfinite(res.p99_latency_s)
+    assert res.decisions_per_s > 0
+    assert 0.0 <= res.slo["violation_frac"] <= 1.0
+    assert res.shards is None  # single-host engines report no shard rows
+
+
+def test_diurnal_arrivals_deterministic_and_modulated():
+    """The diurnal mix is reproducible in the seed and actually modulates:
+    inter-arrival gaps at the peak phase run shorter than at the trough."""
+    cfg = StreamConfig(arrival="diurnal", n_requests=600, rate_per_s=4.0, diurnal_amp=0.9, seed=3)
+    _, a1 = generate_arrivals(cfg)
+    _, a2 = generate_arrivals(cfg)
+    assert [x.t for x in a1] == [x.t for x in a2]
+    ts = np.asarray([x.t for x in a1])
+    gaps = np.diff(ts)
+    phase = (ts[:-1] % cfg.diurnal_period_s) / cfg.diurnal_period_s
+    peak = gaps[(phase > 0.15) & (phase < 0.35)]  # sin ~ +1: fastest arrivals
+    trough = gaps[(phase > 0.65) & (phase < 0.85)]  # sin ~ -1: slowest
+    assert peak.mean() < 0.5 * trough.mean()
+
+
+def test_diurnal_amp_validated():
+    with pytest.raises(ValueError):
+        generate_arrivals(StreamConfig(arrival="diurnal", diurnal_amp=1.0, n_requests=1))
