@@ -14,6 +14,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compaction as _compaction
 from repro.kernels import fitstats as _fitstats
 from repro.kernels import rangemax as _rangemax
 from repro.kernels import segmax as _segmax
@@ -156,6 +157,43 @@ def range_max_table(x: jax.Array, *, interpret: bool | None = None) -> jax.Array
         return _rangemax.table_levels_jnp(x)
     interpret = _use_interpret() if interpret is None else interpret
     return _range_max_table_jit(x, interpret=interpret)
+
+
+def compact_events(
+    tl_t: jax.Array, tl_d: jax.Array, keep: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """(N, L) sorted event rows + keep mask -> rows with the kept entries
+    moved to the front (order preserved) and (+inf, 0) identities behind.
+
+    The sweep program's chunk-boundary compaction step
+    (``sim.device_timeline._sweep_lane``): the keep mask marks the
+    demand-shape-changing breakpoints, everything else is dropped so the
+    carried axis stays sized by live breakpoints.  A pure permutation in
+    both backends — no kept value is recomputed.
+
+    Float32 inputs route through the Pallas kernel (padded to tile
+    multiples); float64 — the scheduling programs' working precision, which
+    the TPU kernel cannot hold — uses the jnp rank-scatter twin,
+    bit-identical by construction.  Safe to call from inside traced
+    programs: dispatch happens at trace time.
+    """
+    if tl_t.dtype != jnp.float32 or tl_t.ndim != 2:
+        return _compaction.compact_events_jnp(tl_t, tl_d, keep)
+    interpret = _use_interpret() if interpret is None else interpret
+    return _compact_events_jit(tl_t, tl_d, keep, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _compact_events_jit(
+    tl_t: jax.Array, tl_d: jax.Array, keep: jax.Array, *, interpret: bool
+) -> tuple[jax.Array, jax.Array]:
+    B, L = tl_t.shape
+    tp = _pad_cols(_pad_rows(tl_t, _compaction.BLOCK_B, fill=jnp.inf), _compaction.LANE, fill=jnp.inf)
+    dp = _pad_cols(_pad_rows(tl_d, _compaction.BLOCK_B), _compaction.LANE)
+    kp = _pad_cols(_pad_rows(keep.astype(jnp.int32), _compaction.BLOCK_B), _compaction.LANE)
+    t2, d2 = _compaction.compact_pallas(tp, dp, kp, interpret=interpret)
+    # kept counts never exceed L, so the compacted prefix fits the caller's axis
+    return t2[:B, :L], d2[:B, :L]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

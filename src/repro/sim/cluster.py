@@ -32,11 +32,14 @@ path's ``IncrementalDemandProfile``):
   see tests/test_cluster_batch.py, tests/test_cluster_placement.py and
   tests/test_cluster_congested.py.
 
-With more than one policy and shallow lanes (at most ``_SWEEP_AUTO_ROWS``
-attempt rows each), ``run_cluster_batched`` routes placement through the
-lane-vmapped whole-run sweep program by default (one dispatch for the whole
-policy set; deep runs amortize better through the per-policy windows loop,
-and ``placement="windows"``/``"sweep"`` force either engine), and
+With more than one policy, ``run_cluster_batched`` routes placement by a
+measured per-row cost model (``_auto_sweep``): the lane-vmapped whole-run
+sweep program (one dispatch for the whole policy set, carried timelines
+compacted to live breakpoints at every chunk boundary) when the model
+predicts its row-serial scan beats the windows loop's per-dispatch +
+per-row cost — the dispatch-bound regime of many shallow lanes on small
+clusters — and the per-policy windows loop otherwise
+(``placement="windows"``/``"sweep"`` force either engine), and
 ``run_cluster_sweep`` extends the same program to the full
 capacity-planning design space — (corpus x policy x node count) lanes in
 one warm dispatch, Pareto-reducible via ``pareto_frontier`` — see
@@ -548,14 +551,63 @@ def _policy_result(
     )
 
 
-# "auto" placement routes multi-policy runs through the lane-vmapped sweep
-# program only while every lane stays at most this many attempt rows deep.
-# Beyond it the per-policy windows loop wins: the sweep's row-serial scan
-# carries whole-run timelines whose axis grows with the run's live events
-# (measured ~4 ms/row at ~1k-row congested lanes vs ~0.3 ms/row shallow),
-# while the windows loop amortizes depth across 128-row batched dispatches —
-# at ~170-row lanes the windows loop already wins ~2x.
-_SWEEP_AUTO_ROWS = 128
+# "auto" placement routes by a per-row cost model instead of the old fixed
+# row threshold (_SWEEP_AUTO_ROWS = 128): with the sweep program's chunk
+# boundaries now compacting the carried timelines down to live breakpoints
+# (``device_timeline._sweep_lane``), lane depth alone no longer decides —
+# what matters is each engine's predicted wall.  Constants are measured on
+# the bench host (BENCH_cluster.json shapes, warm placement walls):
+#
+# * windows: ~_WIN_DISPATCH_S per program dispatch (device round-trip plus
+#   the host loop's bookkeeping between windows) + ~_WIN_ROW_S per attempt
+#   row (fits well from 12-dispatch/144-row up to 96-dispatch/6805-row
+#   workloads).
+# * sweep: one row-step per (padded) attempt row, each costing per lane
+#   ~_SWEEP_STEP_S fixed + _SWEEP_CELL_S per carried timeline cell (N x
+#   L-hat, the compacted axis): predicts 1.9 ms/row-step at (4 lanes, 16
+#   nodes, L=512) vs 1.8 measured, 6.1 ms at the congested (7, 32, 512)
+#   grid vs 6.7 measured.
+#
+# The sweep therefore wins the dispatch-bound regime — many lanes of
+# shallow rows on small clusters, where the windows loop pays one dispatch
+# per policy-window — and the windows loop wins once per-row compute
+# dominates (large N x L-hat or deep lanes on few lanes).  The congested
+# bench (1k-row lanes, 32 nodes) honestly routes to windows on a serial
+# CPU host; the forced-sweep twin of that workload is benched and
+# parity-gated as the ``sweep_deep`` variant.
+_WIN_DISPATCH_S = 1.5e-3
+_WIN_ROW_S = 4.0e-5
+_SWEEP_STEP_S = 7.0e-5
+_SWEEP_CELL_S = 5.0e-8
+
+
+def _auto_sweep(rows: dict, policies: tuple, n_nodes: int, window: int) -> bool:
+    """The ``placement="auto"`` router: True when the cost model predicts
+    the single-dispatch sweep beats the per-policy windows loop."""
+    from repro.sim.device_timeline import sweep_axis_hint
+
+    if len(policies) < 2:
+        return False  # nothing to amortize: one lane costs a whole sweep scan
+    lane_rows = [len(rows[p][2]) for p in policies]
+    rmax, kmax = max(lane_rows), max(rows[p][0].shape[1] for p in policies)
+    L_hat = sweep_axis_hint(len(policies), rmax, kmax, n_nodes)
+    est_sweep = rmax * len(policies) * (_SWEEP_STEP_S + _SWEEP_CELL_S * n_nodes * L_hat)
+    est_windows = sum(
+        -(-r // window) * _WIN_DISPATCH_S + r * _WIN_ROW_S for r in lane_rows
+    )
+    return est_sweep <= est_windows
+
+
+def _merge_stats(acc: dict, stats: dict) -> None:
+    """Fold one run's placement stats into the caller's accumulator:
+    counters add, per-lane lists replace, the timeline axis keeps its max."""
+    for k, v in stats.items():
+        if isinstance(v, list):
+            acc[k] = v
+        elif k == "timeline_axis":
+            acc[k] = max(acc.get(k, 0), v)
+        else:
+            acc[k] = acc.get(k, 0) + v
 
 
 def run_cluster_batched(
@@ -607,15 +659,16 @@ def run_cluster_batched(
     every policy as one lane of a single vmapped whole-run program
     (``device_timeline.sweep_schedule`` — identical decisions, one dispatch
     for the whole policy set instead of a host loop of windows); ``"auto"``
-    (default) sweeps when there is more than one policy to amortize over
-    AND every lane is shallow (``<= _SWEEP_AUTO_ROWS`` attempt rows).  The
-    sweep's row-serial scan carries each lane's whole-run timelines, whose
-    axis grows with the live events a deep run accumulates, so its per-row
-    cost rises with lane depth while the windows engine amortizes depth
-    across 128-row batched dispatches — wide shallow grids belong to the
-    sweep, deep runs to the windows loop.  A sweep lane that overflows the
-    program's bounded timeline axis falls back to the windows engine for
-    that policy alone.
+    (default) picks by the measured per-row cost model ``_auto_sweep``:
+    the sweep costs one row-step per attempt row, each ~linear in its
+    carried timeline cells (lanes x nodes x compacted axis — the chunk
+    boundaries fold and compact the carry down to demand-shape-changing
+    breakpoints, so the axis tracks live breakpoints, not run depth),
+    while the windows loop costs one dispatch per policy-window plus a
+    small per-row term.  Many shallow lanes on small clusters route to the
+    sweep; large ``nodes x axis`` grids or few deep lanes to the windows
+    loop.  A sweep lane that overflows the program's bounded timeline axis
+    falls back to the windows engine for that policy alone.
     """
     from repro.sim.batch_engine import compute_cluster_ladders  # deferred: keeps the oracle jax-free
 
@@ -642,8 +695,9 @@ def run_cluster_batched(
     rows = {p: _policy_rows(ladders, queue, p) for p in policies}
     stats = {"program_calls": 0, "program_wall_s": 0.0, "waits_program": 0, "waits_host": 0, "rows": 0}
     placed: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
-    deep = max(len(rows[p][2]) for p in policies) > _SWEEP_AUTO_ROWS
-    if placement == "sweep" or (placement == "auto" and len(policies) > 1 and not deep):
+    if placement == "sweep" or (
+        placement == "auto" and _auto_sweep(rows, policies, n_nodes, placement_window)
+    ):
         from repro.sim.device_timeline import sweep_schedule
 
         node_s, start_s, _, _, dead = sweep_schedule(
@@ -673,8 +727,7 @@ def run_cluster_batched(
         stats["rows"] += len(rows[p][2])
         results[p] = _policy_result(p, queue, counts, waste, *placed[p])
     if placement_stats is not None:
-        for k_, v in stats.items():
-            placement_stats[k_] = placement_stats.get(k_, 0) + v
+        _merge_stats(placement_stats, stats)
     return results
 
 
@@ -758,8 +811,7 @@ def run_cluster_sweep(
             end = start + run_rows
         results[(cname, p, nn)] = _policy_result(p, queue, counts, waste, node, start, end)
     if placement_stats is not None:
-        for k_, v in stats.items():
-            placement_stats[k_] = placement_stats.get(k_, 0) + v
+        _merge_stats(placement_stats, stats)
     return results
 
 

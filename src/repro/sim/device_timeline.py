@@ -29,6 +29,7 @@ wrappers only enter one themselves when none is active.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import functools
 import time
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import enable_compile_cache
+from repro.kernels.ops import compact_events
 from repro.sim.traces import bucket_size, fine_bucket
 
 enable_compile_cache()
@@ -857,9 +859,18 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
     host never re-dispatches between windows.  Structure:
 
     * outer scan (chunks of ``_SWEEP_W`` rows) — folds events at or before
-      the clock into each node's base demand and compacts the timeline
-      buffers (the in-program twin of the host fold ``schedule_epoch`` does
-      between epochs), then rebuilds the running demand sums.
+      the clock into each node's base demand (the in-program twin of the
+      host fold ``schedule_epoch`` does between epochs), then compacts the
+      survivors by dominance: every event whose delta leaves the running
+      sum's bits unchanged is scatter-compacted away
+      (``kernels.ops.compact_events``), so the carried axis stays sized by
+      demand-shape-changing breakpoints — O(live breakpoints), not O(all
+      events ever) — and the running demand sums are rebuilt over the
+      compacted rows.  The staged head-sort splice ``_admission_shard`` uses
+      per decision batch does not transplant here: the lane's probes are
+      row-serial (each row must see the previous row's commit) and the
+      streamed ``_suffix_max_query`` backend reads the whole axis anyway, so
+      keeping that axis small IS the win a deferred splice would chase.
     * inner scan (rows, unrolled) — the ``_find_slot`` semantics of
       ``_schedule_program``: every probe (the unblocked clock probe and the
       CH x k suffix windows of each wait re-probe) runs ``_fit_probes`` with
@@ -883,7 +894,9 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
     node-capped allocations; the host falls back to the per-policy engine
     for that lane); once dead every later row returns unplaced.  Returns
     per-row (placed, node, start) plus the final (clock, pops, waited,
-    dead, overflow).
+    dead, overflow, breakpoint high-water mark) — the high-water mark is the
+    busiest node's carried breakpoint count sampled at the chunk boundaries,
+    the bench's measure of how hard the compaction works.
     """
     R, k = bnd.shape
     N = nmask.shape[0]
@@ -891,7 +904,7 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
     dt = bnd.dtype
 
     def chunk_step(carry, xs):
-        now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any = carry
+        now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any, hw = carry
         # Fold events at or before the clock into each node's base demand
         # (the in-program twin of ``schedule_epoch``'s host-side cut): every
         # later probe is at or after ``now``, so the folded prefix only ever
@@ -902,10 +915,31 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
         gain = jnp.take_along_axis(jnp.cumsum(tl_d, axis=1), jnp.maximum(cnt - 1, 0), axis=1)
         base = base + jnp.where(cnt > 0, gain, 0.0)[:, 0]
         idx = jnp.arange(L)[None, :] + cnt
-        keep = idx < L
+        ahead = idx < L
         idxc = jnp.minimum(idx, L - 1)
-        tl_t = jnp.where(keep, jnp.take_along_axis(tl_t, idxc, axis=1), jnp.inf)
-        tl_d = jnp.where(keep, jnp.take_along_axis(tl_d, idxc, axis=1), 0.0)
+        tl_t = jnp.where(ahead, jnp.take_along_axis(tl_t, idxc, axis=1), jnp.inf)
+        tl_d = jnp.where(ahead, jnp.take_along_axis(tl_d, idxc, axis=1), 0.0)
+        # Dominance compaction (the epoch re-fold of this lane's carry): the
+        # clock fold above removes almost nothing under generous node memory
+        # because reservations release late, but most surviving events do not
+        # change the shape of future demand — zero steps from capped flat
+        # profiles, coincident +/- cancellations, telescoped release groups,
+        # equal-value runs.  Drop every event whose delta leaves the running
+        # sum's BITS unchanged: the recomputed prefix sum then passes through
+        # exactly the same accumulator values at every kept position, every
+        # probe count still lands at a tie-group boundary, and a dropped
+        # breakpoint's settled value is always re-read at its surviving
+        # predecessor (or the own probe at the window start) under the same
+        # segment demand — so placements stay bit-exact against the windows
+        # engine while the carried axis stays sized by live breakpoints
+        # instead of every event the run ever placed (the reason the deep
+        # congested lanes previously outgrew the axis ~4x).
+        cs = base[:, None] + jnp.cumsum(tl_d, axis=1)
+        keep = jnp.isfinite(tl_t) & (
+            cs != jnp.concatenate([base[:, None], cs[:, :-1]], axis=1)
+        )
+        tl_t, tl_d = compact_events(tl_t, tl_d, keep)
+        hw = jnp.maximum(hw, jnp.max(jnp.sum(keep, axis=1)).astype(jnp.int32))
         csm0 = jnp.where(
             _tie_last(tl_t), base[:, None] + jnp.cumsum(tl_d, axis=1), -jnp.inf
         )
@@ -995,7 +1029,7 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
         (now, tl_t, tl_d, _, ev, pops, waited, dead_any, over_any), outs = jax.lax.scan(
             row_step, inner, xs, unroll=W
         )
-        return (now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any), outs
+        return (now, base, tl_t, tl_d, ev, pops, waited, dead_any, over_any, hw), outs
 
     xs = (
         bnd.reshape(R // W, W, k),
@@ -1015,8 +1049,9 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
         jnp.zeros((), jnp.int32),
         jnp.asarray(False),
         jnp.asarray(False),
+        jnp.zeros((), jnp.int32),  # carried-breakpoint high-water mark
     )
-    (now_f, _, _, _, _, pops, waited, dead, over), (placed, node, start) = jax.lax.scan(
+    (now_f, _, _, _, _, pops, waited, dead, over, hw), (placed, node, start) = jax.lax.scan(
         chunk_step, init, xs
     )
     return (
@@ -1028,6 +1063,7 @@ def _sweep_lane(bnd, val, run, pdur, valid, nmask, budget, *, L):
         waited,
         dead,
         over,
+        hw,
     )
 
 
@@ -1290,7 +1326,47 @@ def admission_epoch(n_dev: int = 1, Lp: int | None = None):
 # Timeline-axis hint per padded grid signature: a grid that needed an
 # overflow-doubled axis starts the next dispatch there, so warm calls are a
 # single dispatch instead of re-walking the doubling ladder every time.
-_SWEEP_L_HINT: dict[tuple, int] = {}
+# Last known-good timeline axis per grid shape, so warm re-dispatches skip
+# the doubling ladder.  A bounded LRU: long sessions sweep many grid shapes
+# (every (lanes, rows, segments, nodes) combination is a key) and the hint is
+# a pure performance cache — evicting one costs at most a re-probe from the
+# floor, never correctness.
+_SWEEP_L_HINT: "collections.OrderedDict[tuple, int]" = collections.OrderedDict()
+_SWEEP_L_HINT_CAP = 64
+
+
+def _hint_get(key: tuple) -> int:
+    """LRU read: 0 when unknown (the floor decides)."""
+    L = _SWEEP_L_HINT.get(key, 0)
+    if L:
+        _SWEEP_L_HINT.move_to_end(key)
+    return L
+
+
+def _hint_put(key: tuple, L: int) -> None:
+    """LRU write with eviction at ``_SWEEP_L_HINT_CAP`` entries."""
+    _SWEEP_L_HINT[key] = L
+    _SWEEP_L_HINT.move_to_end(key)
+    while len(_SWEEP_L_HINT) > _SWEEP_L_HINT_CAP:
+        _SWEEP_L_HINT.popitem(last=False)
+
+
+def sweep_axis_hint(S: int, rmax: int, kmax: int, N: int, *, timeline_floor: int = 256) -> int:
+    """The timeline axis the sweep program would start from for this grid
+    shape — the ``placement="auto"`` router's L-hat.
+
+    Exact after one warm run at the shape (the LRU hint stores the L the
+    grid settled on, doubling re-dispatches included); cold, an estimate
+    from the compaction bound: the carried axis holds live breakpoints,
+    measured ~0.4x the lane's attempt rows on the congested bench (hw 426
+    of 1057 rows), never the full ``rows x (k+2)`` event volume.
+    """
+    R = _row_bucket(max(rmax, 1))
+    hinted = _hint_get((S, R, kmax, N))
+    if hinted:
+        return hinted
+    bound = bucket_size(max(rmax * 2 // 5, 1), floor=timeline_floor)
+    return max(bucket_size(_SWEEP_W * (kmax + 2), floor=timeline_floor), min(bound, 8192))
 
 
 def _row_bucket(n: int) -> int:
@@ -1344,7 +1420,10 @@ def sweep_schedule(
         (each axis size is its own compiled variant, so the floor is chosen
         generously); a lane still overflowing at the cap is reported dead.
       stats: optional ``{"program_calls", "program_wall_s",
-        "waits_program"}`` accumulator (the bench's counters).
+        "waits_program"}`` accumulator (the bench's counters), plus the
+        last dispatch's compaction health: ``carried_hw`` (per-lane
+        carried-breakpoint high-water marks) and ``timeline_axis`` (the L
+        the grid settled on).
 
     Rows are padded to a shared ``(S, R, k)`` grid: row axes with +inf
     boundaries / False valid, segment axes hold-last (padded segments have
@@ -1378,12 +1457,12 @@ def sweep_schedule(
     hint_key = (S, R, kmax, N)
     L = max(
         bucket_size(_SWEEP_W * (kmax + 2), floor=timeline_floor),
-        min(_SWEEP_L_HINT.get(hint_key, 0), timeline_cap),
+        min(_hint_get(hint_key), timeline_cap),
     )
     with _x64_ctx():
         while True:
             t0 = time.perf_counter()
-            placed, node, start, _, pops, waited, dead, over = _sweep_program(
+            placed, node, start, _, pops, waited, dead, over, hw = _sweep_program(
                 bnd, val, run, pdur, valid, nmask, budget, L=L
             )
             placed, dead, over = np.asarray(placed), np.asarray(dead), np.asarray(over)
@@ -1395,7 +1474,7 @@ def sweep_schedule(
             if not over.any() or L >= timeline_cap:
                 break
             L *= 2
-    _SWEEP_L_HINT[hint_key] = L
+    _hint_put(hint_key, L)
     dead = dead | over  # still overflowing at the cap: replay on the fallback
     for s, (b, _, _, _) in enumerate(lane_rows):
         assert dead[s] or placed[s, : b.shape[0]].all(), f"lane {s}: unplaced rows"
@@ -1403,6 +1482,12 @@ def sweep_schedule(
         stats["waits_program"] = stats.get("waits_program", 0) + int(
             np.asarray(waited)[~dead].sum()
         )
+        # compaction health: the carried-breakpoint high-water mark per lane
+        # (busiest node, sampled at fold boundaries) and the axis it had to
+        # fit in — the bench records both, so a compaction regression shows
+        # up as hw growth long before it costs a doubling re-dispatch
+        stats["carried_hw"] = np.asarray(hw, dtype=np.int64).tolist()
+        stats["timeline_axis"] = L
     return (
         np.asarray(node, dtype=np.int64),
         np.asarray(start, dtype=np.float64),

@@ -66,16 +66,86 @@ def test_sweep_matches_windows_congested():
         _assert_equal_results(sweep[p], windows[p])
 
 
-def test_auto_routes_multi_policy_through_sweep():
-    wfs = _wfs(seed=3)
+def test_auto_routes_by_cost_model():
+    """``placement="auto"`` routes by the measured per-row cost model
+    (``cluster._auto_sweep``): many short lanes on a one-node cluster
+    amortize into one sweep dispatch; deeper lanes — where the sweep pays
+    per attempt row over its carried (nodes x timeline) grid — honestly
+    route to the per-policy windows loop."""
+    shallow = dict(node_mib=24 * 1024.0, max_tasks_per_type=6, min_executions=6, train_frac=0.5)
+    wfs = _wfs(seed=3, scale=0.1)
     st_a: dict = {}
-    auto = run_cluster_batched(
-        wfs, POLICIES[:2], n_nodes=1, placement_stats=st_a, **CONGESTED
-    )
+    auto = run_cluster_batched(wfs, POLICIES, n_nodes=1, placement_stats=st_a, **shallow)
     assert st_a["program_calls"] == 1  # sweep: one dispatch, not a window loop
-    windows = run_cluster_batched(wfs, POLICIES[:2], n_nodes=1, placement="windows", **CONGESTED)
-    for p in POLICIES[:2]:
+    windows = run_cluster_batched(wfs, POLICIES, n_nodes=1, placement="windows", **shallow)
+    for p in POLICIES:
         _assert_equal_results(auto[p], windows[p])
+    # ~6x the rows per lane: the row-step cost now exceeds the windows
+    # loop's per-dispatch overhead, so auto picks windows (>1 dispatch)
+    st_d: dict = {}
+    run_cluster_batched(_wfs(seed=3), POLICIES[:2], n_nodes=1, placement_stats=st_d, **CONGESTED)
+    assert st_d["program_calls"] > 1
+    # a single policy never sweeps: one lane can't amortize the scan, so
+    # auto's dispatch pattern matches the forced windows run exactly
+    st_1: dict = {}
+    st_1w: dict = {}
+    run_cluster_batched(wfs, POLICIES[:1], n_nodes=1, placement_stats=st_1, **shallow)
+    run_cluster_batched(
+        wfs, POLICIES[:1], n_nodes=1, placement="windows", placement_stats=st_1w, **shallow
+    )
+    assert st_1["program_calls"] == st_1w["program_calls"]
+
+
+def test_sweep_deep_lane_parity_and_bounded_carry():
+    """Congested-depth lanes (>= 512 attempt rows each) forced through the
+    sweep: still ONE dispatch, exact per-attempt parity with the windows
+    engine, and — the compaction invariant — the carried timeline axis and
+    its per-lane high-water stay bounded by live breakpoints instead of
+    growing with run length (hw << rows/lane; pre-compaction the carry held
+    every splice the run ever made)."""
+    from repro.sim import generate_suite
+
+    wfs = generate_suite(seed=0, scale=0.2)
+    pol = ("default", "ksegments-selective")
+    kw = dict(n_nodes=2, node_mib=24 * 1024.0, max_tasks_per_type=150,
+              min_executions=6, train_frac=0.5)
+    st_s: dict = {}
+    sweep = run_cluster_batched(wfs, pol, placement="sweep", placement_stats=st_s, **kw)
+    rows_per_lane = st_s["rows"] // len(pol)
+    assert rows_per_lane >= 512
+    assert st_s["program_calls"] == 1
+    assert st_s["waits_host"] == 0
+    assert st_s["waits_program"] >= 100  # genuinely congested: waits dominate
+    # bounded carry: the compacted axis and every lane's breakpoint
+    # high-water sit well under the lane depth (and far under rows x (k+2),
+    # the uncompacted event volume)
+    assert st_s["timeline_axis"] < rows_per_lane
+    assert max(st_s["carried_hw"]) < rows_per_lane // 2
+    windows = run_cluster_batched(wfs, pol, placement="windows", **kw)
+    for p in pol:
+        _assert_equal_results(sweep[p], windows[p])
+
+
+@settings(deadline=None, max_examples=3)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([25, 60, 150]))
+def test_property_sweep_parity_over_densities(seed, mtpt):
+    """Queue density (tasks admitted per type) sets lane depth; at every
+    density the forced sweep must match the windows engine attempt by
+    attempt, in one dispatch."""
+    wfs = _wfs(seed=seed, scale=0.25)
+    kw = dict(
+        n_nodes=2, node_mib=24 * 1024.0, max_tasks_per_type=mtpt,
+        min_executions=6, train_frac=0.5,
+    )
+    st_s: dict = {}
+    sweep = run_cluster_batched(
+        wfs, POLICIES[:2], placement="sweep", placement_stats=st_s, **kw
+    )
+    assert st_s["program_calls"] == 1
+    assert st_s["waits_host"] == 0
+    windows = run_cluster_batched(wfs, POLICIES[:2], placement="windows", **kw)
+    for p in POLICIES[:2]:
+        _assert_equal_results(sweep[p], windows[p])
 
 
 def test_lane_heterogeneity_unequal_node_counts():
@@ -121,6 +191,105 @@ def test_sweep_multi_corpus_keys_and_pareto():
         for i in np.flatnonzero(keep):
             dom = (arr <= arr[i]).all(axis=1) & (arr < arr[i]).any(axis=1)
             assert not dom.any()
+
+
+def _lane(r, seed, k=2):
+    """Synthetic attempt rows in sweep_schedule's lane layout."""
+    rng = np.random.default_rng(seed)
+    bnd = np.stack([rng.uniform(1.0, 2.0, r), np.full(r, np.inf)], axis=1)
+    val = rng.uniform(50.0, 200.0, (r, k))
+    run = rng.uniform(2.0, 4.0, r)
+    return bnd, val, run, run
+
+
+def test_sweep_hint_lru_bounded():
+    """The timeline-axis hint is a bounded LRU: long sessions sweeping many
+    grid shapes must not grow it without bound, eviction is oldest-first,
+    and a read refreshes recency."""
+    from repro.sim import device_timeline as dt
+
+    saved = dict(dt._SWEEP_L_HINT)
+    try:
+        dt._SWEEP_L_HINT.clear()
+        for i in range(dt._SWEEP_L_HINT_CAP + 10):
+            dt._hint_put(("grid", i), 256)
+        assert len(dt._SWEEP_L_HINT) == dt._SWEEP_L_HINT_CAP
+        assert dt._hint_get(("grid", 0)) == 0  # oldest: evicted
+        assert dt._hint_get(("grid", dt._SWEEP_L_HINT_CAP + 9)) == 256
+        # a hit refreshes recency: the touched key survives the next eviction
+        oldest_alive = ("grid", 10)
+        assert dt._hint_get(oldest_alive) == 256
+        dt._hint_put(("grid", "fresh"), 512)
+        assert dt._hint_get(oldest_alive) == 256
+        assert dt._hint_get(("grid", 11)) == 0  # the unrefreshed one went
+    finally:
+        dt._SWEEP_L_HINT.clear()
+        dt._SWEEP_L_HINT.update(saved)
+
+
+def test_sweep_overflow_doubling_and_dead_lane():
+    """The axis-growth ladder end to end: a floor far below the carried
+    events re-dispatches with the axis doubled (extra program_calls, same
+    placements bit for bit); a cap below the need flags the deep lane dead
+    while the shallow lane still schedules."""
+    from repro.sim import device_timeline as dt
+    from repro.sim.device_timeline import sweep_schedule
+
+    # one node, generous budget: every row starts immediately, so the carry
+    # holds ~all future completions at once — deeper than a tiny axis
+    lanes = [_lane(60, 0), _lane(6, 1)]
+    nodes, budgets = [1, 1], [50_000.0, 50_000.0]
+    saved = dict(dt._SWEEP_L_HINT)
+    try:
+        dt._SWEEP_L_HINT.clear()
+        st_ref: dict = {}
+        ref = sweep_schedule(lanes, nodes, budgets, stats=st_ref)
+        assert not ref[4].any()
+        dt._SWEEP_L_HINT.clear()
+        st_d: dict = {}
+        got = sweep_schedule(lanes, nodes, budgets, timeline_floor=16, stats=st_d)
+        assert st_d["program_calls"] > st_ref["program_calls"]  # walked the ladder
+        assert st_d["timeline_axis"] > 16
+        assert not got[4].any()
+        np.testing.assert_array_equal(got[0], ref[0])  # node choices
+        np.testing.assert_array_equal(got[1], ref[1])  # start times
+        # still overflowing at the cap: the deep lane is dead, the shallow
+        # lane's placements are intact
+        dt._SWEEP_L_HINT.clear()
+        capped = sweep_schedule(lanes, nodes, budgets, timeline_floor=16, timeline_cap=16)
+        assert bool(capped[4][0]) and not bool(capped[4][1])
+        r1 = lanes[1][0].shape[0]
+        np.testing.assert_array_equal(capped[0][1, :r1], ref[0][1, :r1])
+        np.testing.assert_array_equal(capped[1][1, :r1], ref[1][1, :r1])
+    finally:
+        dt._SWEEP_L_HINT.clear()
+        dt._SWEEP_L_HINT.update(saved)
+
+
+def test_dead_lane_replays_through_windows_engine(monkeypatch):
+    """A lane reported dead by the sweep program (timeline overflow at the
+    cap) must transparently replay through the per-policy windows engine
+    inside ``run_cluster_batched`` — same results, attempt for attempt."""
+    import repro.sim.device_timeline as dt
+
+    orig = dt.sweep_schedule
+
+    def first_lane_dead(lane_rows, lane_nodes, lane_budgets, **kw):
+        node, start, pops, waited, dead = orig(lane_rows, lane_nodes, lane_budgets, **kw)
+        dead = dead.copy()
+        dead[0] = True
+        return node, start, pops, waited, dead
+
+    monkeypatch.setattr(dt, "sweep_schedule", first_lane_dead)
+    wfs = _wfs()
+    st: dict = {}
+    res = run_cluster_batched(
+        wfs, POLICIES[:2], n_nodes=2, placement="sweep", placement_stats=st, **CONGESTED
+    )
+    assert st["program_calls"] > 1  # the sweep dispatch plus windows replays
+    windows = run_cluster_batched(wfs, POLICIES[:2], n_nodes=2, placement="windows", **CONGESTED)
+    for p in POLICIES[:2]:
+        _assert_equal_results(res[p], windows[p])
 
 
 def test_pareto_frontier_basics():

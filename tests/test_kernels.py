@@ -60,6 +60,36 @@ def test_wastage_failure_state_machine_across_blocks():
     np.testing.assert_allclose(np.asarray(w), 50.0 * 1101 * 2.0 / 1024.0, rtol=1e-5)
 
 
+@pytest.mark.parametrize("B,L", [(1, 8), (3, 100), (8, 512), (17, 640), (5, 2048)])
+def test_compact_events_pallas_matches_jnp(B, L):
+    """The sweep's chunk-boundary compaction: the Pallas triangular-gather
+    kernel vs the jnp rank-scatter twin, bit for bit — kept entries move to
+    the front in order, (+inf, 0) identities fill the tail."""
+    from repro.kernels import compaction
+
+    rng = np.random.default_rng(B * 101 + L)
+    t = np.sort(rng.uniform(0.0, 1e4, (B, L)), axis=1).astype(np.float32)
+    d = rng.uniform(-200.0, 200.0, (B, L)).astype(np.float32)
+    keep = rng.random((B, L)) < rng.uniform(0.05, 0.9)
+    # padded tails carry the identity and are never kept
+    n_pad = rng.integers(0, L // 2 + 1, B)
+    for i, p in enumerate(n_pad):
+        if p:
+            t[i, L - p :], d[i, L - p :], keep[i, L - p :] = np.inf, 0.0, False
+    out_t, out_d = ops.compact_events(jnp.asarray(t), jnp.asarray(d), jnp.asarray(keep))
+    ref_t, ref_d = compaction.compact_events_jnp(jnp.asarray(t), jnp.asarray(d), jnp.asarray(keep))
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(ref_t))
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(ref_d))
+    # semantics against a python oracle: stable front-compaction
+    for i in range(B):
+        kt, kd = t[i, keep[i]], d[i, keep[i]]
+        n = len(kt)
+        np.testing.assert_array_equal(np.asarray(out_t)[i, :n], kt)
+        np.testing.assert_array_equal(np.asarray(out_d)[i, :n], kd)
+        assert np.all(np.isinf(np.asarray(out_t)[i, n:]))
+        assert np.all(np.asarray(out_d)[i, n:] == 0.0)
+
+
 def test_kernels_against_trace_corpus():
     """Integration: kernels reproduce the oracle on generated workflow traces."""
     from repro.sim import generate_eager

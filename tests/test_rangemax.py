@@ -90,6 +90,23 @@ def test_pallas_kernel_matches_jnp_twin():
         np.testing.assert_array_equal(got, want)
 
 
+def test_compact_events_f64_routes_to_jnp_twin():
+    """float64 event rows (the scheduling programs' working precision) must
+    bypass the f32 compaction kernel and still produce exact stable
+    front-compaction with (+inf, 0) identities behind."""
+    from repro.kernels.ops import compact_events
+
+    with _x64_ctx():
+        t = jnp.asarray(np.array([[1.0, 2.0, 3.0, np.inf]]), jnp.float64)
+        d = jnp.asarray(np.array([[5.0, -5.0, 7.0, 0.0]]), jnp.float64)
+        keep = jnp.asarray(np.array([[False, True, True, False]]))
+        assert t.dtype == jnp.float64
+        out_t, out_d = compact_events(t, d, keep)
+        assert out_t.dtype == jnp.float64
+    np.testing.assert_array_equal(np.asarray(out_t)[0], [2.0, 3.0, np.inf, np.inf])
+    np.testing.assert_array_equal(np.asarray(out_d)[0], [-5.0, 7.0, 0.0, 0.0])
+
+
 def test_count_sorted_boundary_epsilon():
     """Counts at event instants, one ulp before and one ulp after — the
     exact probe placements the scheduling programs use."""

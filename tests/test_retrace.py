@@ -179,3 +179,20 @@ def test_sweep_schedule_warm_zero_retrace():
     for rows, seed in (([10, 11], 10), ([11, 12], 20), ([12, 9], 30)):
         with no_recompiles(f"sweep rows={rows}"):
             sweep_schedule(_lanes(rows, seed), nodes, budgets)
+
+
+def test_sweep_schedule_congested_budget_warm_zero_retrace():
+    """Tight budgets drive the sweep's in-program wait path AND its
+    chunk-boundary compaction fold (rows span several _SWEEP_W chunks, so
+    the carry is repeatedly folded and compacted); warm re-dispatches with
+    new values and drifting row counts in the same bucket stay silent."""
+    nodes = [1, 2]
+    # every row fits alone (max value < budget) but most pairs don't: the
+    # single-node lane serializes through the wait path
+    budgets = [220.0, 220.0]
+    _, _, _, _, waited, dead = (None, *sweep_schedule(_lanes([40, 44], seed=0), nodes, budgets))
+    assert not dead.any()
+    assert waited.sum() >= 10
+    for rows, seed in (([40, 44], 7), ([44, 40], 8), ([42, 38], 9)):
+        with no_recompiles(f"sweep congested rows={rows}"):
+            sweep_schedule(_lanes(rows, seed), nodes, budgets)
